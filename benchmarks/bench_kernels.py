@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: us_per_call for the Pallas kernels (interpret
+mode on CPU — correctness-path timing) vs the XLA reference implementation,
+plus the streaming-vs-plain executor comparison (the paper's layer-wise
+disposal strategy, Fig. 4's inference column).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import meshnet
+from repro.core.meshnet import MeshNetConfig
+from repro.core import streaming
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench() -> list[tuple[str, float, str]]:
+    rows = []
+    x = jax.random.normal(KEY, (1, 32, 32, 32, 5))
+    w = jax.random.normal(KEY, (3, 3, 3, 5, 5)) * 0.2
+    b = jnp.zeros((5,))
+
+    ref_fn = jax.jit(lambda x, w, b: ref.dilated_conv3d(x, w, b, dilation=8))
+    rows.append(("dilated_conv3d_xla_ref_32cube", _time(ref_fn, x, w, b), "oracle"))
+    pal_fn = jax.jit(
+        lambda x, w, b: ops.dilated_conv3d(x, w, b, dilation=8, interpret=True)
+    )
+    rows.append(("dilated_conv3d_pallas_interp_32cube", _time(pal_fn, x, w, b), "interpret-mode (correctness path; compiled Mosaic on TPU)"))
+
+    pred = jax.random.randint(KEY, (64, 64, 64), 0, 3)
+    truth = jax.random.randint(jax.random.PRNGKey(1), (64, 64, 64), 0, 3)
+    from repro.training import losses
+
+    rows.append(("dice_xla_ref_64cube", _time(jax.jit(lambda a, b: losses.dice_score(a, b, 3)), pred, truth), "oracle"))
+    rows.append(("dice_pallas_interp_64cube", _time(lambda a, b: ops.dice(a, b, 3, interpret=True), pred, truth), "interpret-mode"))
+
+    cfg = MeshNetConfig()
+    p = meshnet.init(KEY, cfg)
+    vol = jax.random.normal(KEY, (1, 32, 32, 32))
+    plain = jax.jit(lambda v: meshnet.apply(p, v, cfg))
+    rows.append(("meshnet_plain_32cube", _time(plain, vol), "all-layers graph"))
+    stream = jax.jit(lambda v: streaming.streaming_apply(p, v, cfg))
+    rows.append(("meshnet_streaming_32cube", _time(stream, vol), "scan-over-layers (paper's layer disposal)"))
+    return rows

@@ -1,0 +1,309 @@
+"""Benchmarks reproducing the paper's tables on the simulated substrate.
+
+Table II  -> table2_model_size_and_dice(): MeshNet (full + subvolume) vs
+             U-Net: parameter count, model size (MB), macro Dice after the
+             same short training budget on synthetic GWM volumes.
+Table IV  -> table4_pipeline_stages(): per-model pipeline stage timings
+             (preprocess / crop / inference / merge / postprocess).
+Table V   -> table5_fail_types(): success rate of full-volume vs sub-volume
+             inference across a simulated fleet of memory budgets.
+Table VI  -> table6_patching_cropping(): the patching & cropping
+             interventions (exclusion groups + IPTW ATE estimates).
+Table VII -> table7_cropping_effect(): cropping effect on full-volume
+             inference per model size (chi-square + power).
+Table VIII-> table8_texture_size(): budget ("texture size") effect.
+
+The browser fleet is simulated as a distribution over memory budgets
+(DESIGN.md §2); every number the analysis produces is regenerated from the
+budget model + the pipeline's actual behaviour, not hard-coded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import meshnet, pipeline, unet3d
+from repro.core.meshnet import MeshNetConfig
+from repro.core.pipeline import PipelineConfig
+from repro.data import mri
+from repro.telemetry import analysis
+from repro.telemetry.budget import BudgetExceeded, MemoryBudget
+from repro.training import losses, optimizer as opt_mod, trainer
+
+VOL = 48  # synthetic volume side on CPU (paper: 256)
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------- Table II ---
+
+
+def _train_unet(steps=60, shape=(32, 32, 32)) -> tuple:
+    cfg = unet3d.UNet3DConfig(base_channels=8, levels=2)
+    params = unet3d.init(KEY, cfg)
+    opt_cfg = opt_mod.AdamWConfig(lr=1e-3)
+    state = opt_mod.adamw_init(params, opt_cfg)
+    loader = iter(mri.DataLoader(mri.DataLoaderConfig(mri=mri.SyntheticMRIConfig(shape=shape), batch_size=2)))
+
+    @jax.jit
+    def step(params, state, vol, lab):
+        def loss_fn(p):
+            logits = unet3d.apply(p, vol, cfg)
+            return losses.segmentation_loss(logits, lab, cfg.num_classes)[0]
+
+        g = jax.grad(loss_fn)(params)
+        params, state, _ = opt_mod.adamw_update(g, state, params, opt_cfg)
+        return params, state
+
+    for _ in range(steps):
+        vol, lab = next(loader)
+        params, state = step(params, state, vol, lab)
+    # eval
+    dices = []
+    for i in range(3):
+        vol, lab = mri.generate(jax.random.PRNGKey(10_000 + i), mri.SyntheticMRIConfig(shape=shape))
+        pred = unet3d.predict(params, vol[None], cfg)[0]
+        dices.append(float(losses.dice_score(pred, lab, cfg.num_classes)))
+    return cfg, float(np.mean(dices))
+
+
+def table2_model_size_and_dice(steps=30) -> list[dict]:
+    # steps=30 keeps the whole benchmark suite CPU-tractable; the matched-
+    # budget comparison (MeshNet ~= U-Net) is what the row validates —
+    # examples/train_meshnet.py runs the long version.
+    rows = []
+    # MeshNet full-volume
+    t_cfg = trainer.TrainConfig(
+        model=MeshNetConfig(),
+        data=mri.DataLoaderConfig(mri=mri.SyntheticMRIConfig(shape=(32, 32, 32)), batch_size=2),
+        steps=steps, eval_subjects=3, log_every=10_000,
+    )
+    res = trainer.train(t_cfg, verbose=False)
+    n = t_cfg.model.param_count()
+    rows.append(
+        {"model": "MeshNet GWM (full volume)", "params": n,
+         "size_mb": round(n * 4 / 1e6, 3), "dice": round(res.final_dice, 3),
+         "paper_size_mb": 0.022, "paper_dice": 0.96}
+    )
+    # MeshNet trained on sub-volumes (failsafe training mode)
+    t_cfg2 = dataclasses.replace(
+        t_cfg,
+        model=MeshNetConfig(channels=21),
+        data=mri.DataLoaderConfig(
+            mri=mri.SyntheticMRIConfig(shape=(32, 32, 32)), batch_size=2,
+            subvolumes=True, cube=24,
+        ),
+    )
+    res2 = trainer.train(t_cfg2, verbose=False)
+    n2 = t_cfg2.model.param_count()
+    rows.append(
+        {"model": "MeshNet GWM (sub volume)", "params": n2,
+         "size_mb": round(n2 * 4 / 1e6, 3), "dice": round(res2.final_dice, 3),
+         "paper_size_mb": 0.89, "paper_dice": 0.96}
+    )
+    # U-Net baseline
+    ucfg, udice = _train_unet(steps)
+    un = ucfg.param_count()
+    rows.append(
+        {"model": "U-Net GWM", "params": un, "size_mb": round(un * 4 / 1e6, 3),
+         "dice": round(udice, 3), "paper_size_mb": 288, "paper_dice": 0.96}
+    )
+    return rows
+
+
+# --------------------------------------------------------------- Table IV ---
+
+
+def table4_pipeline_stages() -> list[dict]:
+    """Per-stage timings for representative paper model cards."""
+    cards = {
+        "Compute Brain Mask (FAST)": ("brain_mask_fast", "full", False),
+        "Full Brain GWM (light)": ("gwm_light", "full", False),
+        "Full Brain GWM (large)": ("gwm_large", "full", False),
+        "Subvolume GWM (failsafe)": ("subvolume_gwm_failsafe", "subvolume", False),
+        "Cortical Atlas 50": ("atlas_50", "full", True),
+    }
+    vol, _ = mri.generate(KEY, mri.SyntheticMRIConfig(shape=(VOL,) * 3))
+    mask_cfg = meshnet.PAPER_MODELS["brain_mask_fast"]
+    mask_params = meshnet.init(jax.random.PRNGKey(5), mask_cfg)
+    rows = []
+    for name, (model_key, mode, crop) in cards.items():
+        mcfg = meshnet.PAPER_MODELS[model_key]
+        params = meshnet.init(KEY, mcfg)
+        pc = PipelineConfig(
+            name=name, model=mcfg, volume_shape=(VOL,) * 3, mode=mode,
+            cube=16, overlap=8, use_cropping=crop, min_component_size=8,
+        )
+        res = pipeline.run(pc, params, vol, mask_model=(mask_params, mask_cfg))
+        t = res.record.times
+        rows.append(
+            {"model": name, "layers": mcfg.num_layers, "params": mcfg.param_count(),
+             "preprocess_s": round(t.preprocessing, 3), "crop_s": round(t.cropping, 3),
+             "inference_s": round(t.inference, 3), "merge_s": round(t.merging, 3),
+             "postprocess_s": round(t.postprocessing, 3), "status": res.record.status}
+        )
+    return rows
+
+
+# ----------------------------------------------------- fleet simulation -----
+
+
+def simulate_fleet(n=400, seed=0):
+    """A fleet of simulated 'devices': log-uniform memory budgets spanning
+    ~1.4 GiB .. 32 GiB (consumer-GPU-era WebGL working sets), mirroring the
+    paper's device diversity (180 distinct GPU cards). Calibrated so the
+    256^3 GWM full-volume requirement (~3.5 GB under naive all-layers
+    allocation) lands inside the distribution — the regime where the
+    paper's interventions matter."""
+    rng = np.random.default_rng(seed)
+    budgets = 2 ** rng.uniform(30.5, 35.0, n)
+    return [MemoryBudget(int(b), name=f"dev{i}") for i, b in enumerate(budgets)]
+
+
+_FLAKE = 0.05  # residual non-memory failure rate (shader-compile analogue)
+
+
+def _succeeds(budget: MemoryBudget, mode: str, model: MeshNetConfig, shape, cube=64,
+              overlap=46, cropped=False, rng=None) -> bool:
+    s = tuple(int(x * (0.72 if cropped else 1.0)) for x in shape)  # crop shrinks ~28%/axis
+    if rng is not None and rng.uniform() < _FLAKE:
+        return False
+    try:
+        if mode == "full":
+            budget.charge_inference(s, model)
+        elif mode == "streaming":
+            budget.charge_streaming(s, model)
+        else:
+            budget.charge_subvolume(cube, overlap, model)
+        return True
+    except BudgetExceeded:
+        return False
+
+
+def table5_fail_types(n=400) -> dict:
+    model = MeshNetConfig()
+    shape = (256, 256, 256)
+    fleet = simulate_fleet(n)
+    rng = np.random.default_rng(2)
+    full_ok = sum(_succeeds(b, "full", model, shape, rng=rng) for b in fleet)
+    sub_ok = sum(_succeeds(b, "subvolume", model, shape, rng=rng) for b in fleet)
+    return {
+        "full_volume": {"ok": full_ok, "fail": n - full_ok, "success_rate": full_ok / n},
+        "subvolume_failsafe": {"ok": sub_ok, "fail": n - sub_ok, "success_rate": sub_ok / n},
+        "paper": {"full_volume_sr": 0.8108, "subvolume_sr": 0.873},
+    }
+
+
+def table6_patching_cropping(n=400) -> dict:
+    """Patching & cropping treatment effects: contingency + IPTW ATE."""
+    model = MeshNetConfig()
+    shape = (256, 256, 256)
+    fleet = simulate_fleet(n)
+    rng = np.random.default_rng(1)
+    # randomized assignment of treatments across the fleet (RCT-style)
+    patch = rng.integers(0, 2, n)
+    crop = rng.integers(0, 2, n)
+    outcome = np.array(
+        [
+            _succeeds(b, "subvolume" if p else "full", model, shape, cropped=bool(c), rng=rng)
+            for b, p, c in zip(fleet, patch, crop)
+        ],
+        int,
+    )
+    budgets = np.array([np.log2(b.bytes_limit) for b in fleet])
+    res_patch = analysis.contingency(
+        int(((patch == 1) & (outcome == 1)).sum()), int(((patch == 1) & (outcome == 0)).sum()),
+        int(((patch == 0) & (outcome == 1)).sum()), int(((patch == 0) & (outcome == 0)).sum()),
+    )
+    res_crop = analysis.contingency(
+        int(((crop == 1) & (outcome == 1)).sum()), int(((crop == 1) & (outcome == 0)).sum()),
+        int(((crop == 0) & (outcome == 1)).sum()), int(((crop == 0) & (outcome == 0)).sum()),
+    )
+    conf = np.column_stack([budgets, crop])
+    ate_patch = analysis.iptw_ate(patch, outcome, conf)
+    conf2 = np.column_stack([budgets, patch])
+    ate_crop = analysis.iptw_ate(crop, outcome, conf2)
+    reg_patch = analysis.regression_adjustment(patch, outcome, conf)
+    return {
+        "patching": {"chi2_p": res_patch.p_value, "sr_treated": res_patch.success_rate_treated,
+                     "sr_control": res_patch.success_rate_control, "iptw_ate": ate_patch,
+                     "regression_adjustment": reg_patch, "paper_iptw_ate": 0.0623},
+        "cropping": {"chi2_p": res_crop.p_value, "sr_treated": res_crop.success_rate_treated,
+                     "sr_control": res_crop.success_rate_control, "iptw_ate": ate_crop,
+                     "paper_iptw_ate": 0.1812},
+    }
+
+
+def table7_cropping_effect(n=400) -> list[dict]:
+    """Cropping effect per model size (the paper's 5598 / 23290 / 27132 /
+    86372 parameter columns)."""
+    rows = []
+    fleet = simulate_fleet(n)
+    for key in ["gwm_light", "gwm_large", "atlas_50", "atlas_104"]:
+        model = meshnet.PAPER_MODELS[key]
+        shape = (256, 256, 256)
+        rng = np.random.default_rng(3)
+        ok_plain = sum(_succeeds(b, "full", model, shape, cropped=False, rng=rng) for b in fleet)
+        ok_crop = sum(_succeeds(b, "full", model, shape, cropped=True, rng=rng) for b in fleet)
+        res = analysis.contingency(ok_crop, n - ok_crop, ok_plain, n - ok_plain)
+        rows.append(
+            {"model": key, "params": model.param_count(),
+             "sr_no_crop": ok_plain / n, "sr_crop": ok_crop / n,
+             "chi2_p": res.p_value, "power": res.power}
+        )
+    return rows
+
+
+def fig7_cohort_trend(months=12, n_per_month=120) -> list[dict]:
+    """Fig. 5–7 analogue: cohort success rate over time as the device fleet
+    improves. The paper observes the ok/fail gap widening month over month
+    ('annual advances in computational resources'); we model fleet budgets
+    drifting up ~2.5%/month (GPU memory growth) and re-run the same
+    full-volume workload against each cohort."""
+    model = MeshNetConfig()
+    shape = (256, 256, 256)
+    rows = []
+    rng = np.random.default_rng(7)
+    for m in range(months):
+        drift = 1.025 ** m
+        budgets = 2 ** rng.uniform(30.5, 35.0, n_per_month) * drift
+        fleet = [MemoryBudget(int(b)) for b in budgets]
+        ok = sum(_succeeds(b, "full", model, shape, rng=rng) for b in fleet)
+        rows.append(
+            {"month": m, "ok": ok, "fail": n_per_month - ok,
+             "success_rate": round(ok / n_per_month, 4),
+             "gap": ok - (n_per_month - ok)}
+        )
+    return rows
+
+
+def table8_texture_size(n=400) -> dict:
+    """Texture-size ladder: bigger budget class -> higher success rate.
+    16384 vs 32768 texture sizes map to 1 GiB vs 4 GiB working budgets."""
+    model = meshnet.PAPER_MODELS["atlas_104"]
+    shape = (256, 256, 256)
+    out = {}
+    for tex in (16384, 32768):
+        b = MemoryBudget.from_texture_size(tex)
+        ok = _succeeds(b, "full", model, shape)
+        out[str(tex)] = {"budget_bytes": b.bytes_limit, "full_volume_ok": bool(ok)}
+    # fleet-level: compare lower vs upper half of the budget distribution
+    fleet = simulate_fleet(n)
+    med = np.median([b.bytes_limit for b in fleet])
+    small = [b for b in fleet if b.bytes_limit <= med]
+    big = [b for b in fleet if b.bytes_limit > med]
+    rng = np.random.default_rng(4)
+    sr_s = sum(_succeeds(b, "full", model, shape, rng=rng) for b in small) / len(small)
+    sr_b = sum(_succeeds(b, "full", model, shape, rng=rng) for b in big) / len(big)
+    res = analysis.contingency(
+        int(sr_b * len(big)), len(big) - int(sr_b * len(big)),
+        int(sr_s * len(small)), len(small) - int(sr_s * len(small)),
+    )
+    out["fleet"] = {"sr_small_budgets": sr_s, "sr_large_budgets": sr_b,
+                    "chi2_p": res.p_value, "power": res.power,
+                    "paper": {"sr_16384": 0.8015, "sr_32768": 0.9827}}
+    return out

@@ -1,0 +1,92 @@
+"""Hillclimb measurement harness (§Perf): lower a (arch x shape) pair with
+config/step overrides and report the production memory numbers + census
+roofline terms, so every hypothesis->measure cycle in EXPERIMENTS.md §Perf
+is one reproducible command:
+
+  PYTHONPATH=src python benchmarks/hillclimb.py kimi-k2-1t-a32b train_4k --microbatches 4
+  PYTHONPATH=src python benchmarks/hillclimb.py qwen1.5-32b decode_32k --kv-quant
+  PYTHONPATH=src python benchmarks/hillclimb.py jamba-1.5-large-398b train_4k --capacity-factor 1.0
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--remat", default=None, choices=["full", "none"])
+    ap.add_argument("--no-census", action="store_true")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.launch import dryrun, mesh as mesh_mod, steps as steps_mod
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    overrides = {}
+    if args.kv_quant:
+        overrides["kv_quant"] = True
+    if args.capacity_factor is not None:
+        overrides["moe_capacity_factor"] = args.capacity_factor
+    if args.remat:
+        overrides["remat"] = args.remat
+
+    mesh = mesh_mod.make_production_mesh()
+    base_cfg = configs.for_shape(args.arch, args.shape)
+    cfg = dataclasses.replace(base_cfg, **overrides) if overrides else base_cfg
+
+    # monkey-patch the step builder for microbatches
+    orig_make = steps_mod.make_train_step
+    if args.microbatches > 1:
+        steps_mod.make_train_step = lambda c, **kw: orig_make(
+            c, microbatches=args.microbatches, **{k: v for k, v in kw.items() if k != "microbatches"}
+        )
+    try:
+        rec = dryrun.run_one(
+            args.arch, args.shape, mesh, verbose=True, census=not args.no_census,
+            cfg_override=cfg,
+        )
+    finally:
+        steps_mod.make_train_step = orig_make
+
+    flops = rec.get("census_flops", rec["flops"])
+    bytes_acc = rec.get("census_bytes_accessed", rec["bytes_accessed"])
+    coll = rec.get("census_collectives", rec["collectives"])["total"]
+    if args.microbatches > 1:
+        # The microbatch loop is rolled (costed once): scale loop-carried
+        # census terms by M. Slight overcount: the optimizer update runs
+        # once, not M times (small vs per-token work).
+        flops *= args.microbatches
+        bytes_acc *= args.microbatches
+        coll *= args.microbatches
+    print(
+        json.dumps(
+            {
+                "arch": args.arch,
+                "shape": args.shape,
+                "overrides": {**overrides, "microbatches": args.microbatches},
+                "args_gib": round(rec["arg_bytes"] / 2**30, 2),
+                "temp_gib": round(rec["temp_bytes"] / 2**30, 2),
+                "compute_s": round(flops / PEAK_FLOPS_BF16, 4),
+                "memory_s": round(bytes_acc / HBM_BW, 4),
+                "collective_s": round(coll / ICI_BW, 4),
+                "collective_gib": round(coll / 2**30, 2),
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

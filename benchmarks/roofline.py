@@ -1,0 +1,106 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh):
+  compute   = HLO_FLOPs_per_device / peak_FLOP/s           [s]
+  memory    = HLO_bytes_per_device / HBM_bw                [s]
+  collective= collective_bytes_per_device / link_bw        [s]
+(The partitioned HLO is per-device, so no further division by chips.)
+
+Plus MODEL_FLOPS = 6*N*D (train) or 2*N*D (prefill/decode), N = active
+params, D = global tokens; and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) which exposes remat/routing overhead.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.for_shape(arch, shape_name)
+    seq, batch, mode = configs.INPUT_SHAPES[shape_name]
+    n_active = cfg.param_counts()["active"]
+    if mode == "train":
+        tokens = batch * seq
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_active * tokens
+    tokens = batch * 1  # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def roofline_row(rec: dict) -> dict:
+    # Census numbers (unrolled-scan compile) when available — exact per-layer
+    # op counts; the rolled compile costs a while body once, not x trips.
+    flops = rec.get("census_flops", rec["flops"])
+    bytes_acc = rec.get("census_bytes_accessed", rec["bytes_accessed"])
+    coll = rec.get("census_collectives", rec["collectives"])["total"]
+    compute = flops / PEAK_FLOPS_BF16
+    memory = bytes_acc / HBM_BW
+    collective = coll / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops * rec["chips"]
+    ratio = mf / hlo_total if hlo_total else 0.0
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": round(ratio, 4),
+        "peak_gib_per_dev": round(
+            (rec["arg_bytes"] + rec["temp_bytes"] + rec["out_bytes"] - rec["alias_bytes"]) / 2**30, 2
+        ),
+    }
+
+
+def load(mesh_name: str = "16x16") -> dict:
+    path = os.path.join(RESULTS_DIR, f"dryrun_{mesh_name}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(mesh_name: str = "16x16") -> list[dict]:
+    rows = []
+    for key, rec in load(mesh_name).items():
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "status": "fail"})
+            continue
+        rows.append(
+            {
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                **roofline_row(rec),
+            }
+        )
+    return rows
+
+
+def print_table(mesh_name: str = "16x16") -> None:
+    rows = table(mesh_name)
+    hdr = f"{'arch':<22} {'shape':<12} {'compute_s':>10} {'memory_s':>10} {'collect_s':>10} {'dominant':>10} {'useful':>7} {'GiB/dev':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") == "fail":
+            print(f"{r['arch']:<22} {r['shape']:<12} FAILED")
+            continue
+        print(
+            f"{r['arch']:<22} {r['shape']:<12} {r['compute']:>10.4f} {r['memory']:>10.4f} "
+            f"{r['collective']:>10.4f} {r['dominant']:>10} {r['useful_ratio']:>7.3f} "
+            f"{r['peak_gib_per_dev']:>8.2f}"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,123 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entrypoint: PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  [kernels]       Pallas vs oracle micro-benchmarks (us_per_call)
+  [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
+  [table4]        per-model pipeline stage timings
+  [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
+  [roofline]      the three-term roofline per (arch x shape), if dry-run
+                  results exist (results/dryrun_16x16.json)
+
+Pass section names to run a subset: python -m benchmarks.run table2 roofline
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _csv(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def run_kernels() -> None:
+    from benchmarks import bench_kernels
+
+    print("\n[kernels] name,us_per_call,derived")
+    for name, us, note in bench_kernels.bench():
+        _csv(name, us, note)
+
+
+def run_table2() -> None:
+    from benchmarks import bench_paper_tables as T
+
+    print("\n[table2] MeshNet vs U-Net (synthetic GWM, short training budget)")
+    print("model,params,size_mb,dice,paper_size_mb,paper_dice")
+    for r in T.table2_model_size_and_dice():
+        print(
+            f"{r['model']},{r['params']},{r['size_mb']},{r['dice']},"
+            f"{r['paper_size_mb']},{r['paper_dice']}"
+        )
+
+
+def run_table4() -> None:
+    from benchmarks import bench_paper_tables as T
+
+    print("\n[table4] pipeline stage timings (s) — 48^3 synthetic volume on CPU")
+    print("model,params,preprocess,crop,inference,merge,postprocess,status")
+    for r in T.table4_pipeline_stages():
+        print(
+            f"{r['model']},{r['params']},{r['preprocess_s']},{r['crop_s']},"
+            f"{r['inference_s']},{r['merge_s']},{r['postprocess_s']},{r['status']}"
+        )
+
+
+def run_interventions() -> None:
+    from benchmarks import bench_paper_tables as T
+
+    print("\n[table5] full-volume vs sub-volume success across simulated fleet")
+    t5 = T.table5_fail_types()
+    for k, v in t5.items():
+        print(f"{k}: {json.dumps(v)}")
+
+    print("\n[table6] patching & cropping treatment effects (chi2 + IPTW)")
+    t6 = T.table6_patching_cropping()
+    for k, v in t6.items():
+        print(
+            f"{k}: "
+            + json.dumps(
+                {kk: round(vv, 4) if isinstance(vv, float) else vv for kk, vv in v.items()}
+            )
+        )
+
+    print("\n[table7] cropping effect by model size")
+    print("model,params,sr_no_crop,sr_crop,chi2_p,power")
+    for r in T.table7_cropping_effect():
+        print(
+            f"{r['model']},{r['params']},{r['sr_no_crop']:.4f},{r['sr_crop']:.4f},"
+            f"{r['chi2_p']:.2e},{r['power']:.3f}"
+        )
+
+    print("\n[table8] texture-size (memory budget) effect")
+    t8 = T.table8_texture_size()
+    for k, v in t8.items():
+        print(f"{k}: {json.dumps(v)}")
+
+    print("\n[fig7] cohort success-rate trend (fleet budgets drift +2.5%/month)")
+    print("month,ok,fail,success_rate,gap")
+    for r in T.fig7_cohort_trend():
+        print(f"{r['month']},{r['ok']},{r['fail']},{r['success_rate']},{r['gap']}")
+
+
+def run_roofline() -> None:
+    import os
+
+    from benchmarks import roofline
+
+    path = os.path.join(roofline.RESULTS_DIR, "dryrun_16x16.json")
+    if not os.path.exists(path):
+        print("\n[roofline] skipped — run PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    print("\n[roofline] three-term roofline per (arch x shape), single pod v5e-256")
+    roofline.print_table("16x16")
+
+
+SECTIONS = {
+    "kernels": run_kernels,
+    "table2": run_table2,
+    "table4": run_table4,
+    "interventions": run_interventions,
+    "roofline": run_roofline,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SECTIONS)
+    for name in wanted:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

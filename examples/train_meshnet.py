@@ -1,0 +1,47 @@
+"""End-to-end training driver: train MeshNet GWM for a few hundred steps on
+the synthetic-MRI pipeline, with checkpointing, eval and the U-Net baseline
+comparison (the paper's Table II experiment).
+
+    PYTHONPATH=src python examples/train_meshnet.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+
+from repro.core.meshnet import MeshNetConfig
+from repro.data import mri
+from repro.training import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--volume", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/meshnet_ckpt")
+    ap.add_argument("--subvolumes", action="store_true", help="failsafe-style training")
+    args = ap.parse_args()
+
+    cfg = trainer.TrainConfig(
+        model=MeshNetConfig(dropout_rate=0.1),
+        data=mri.DataLoaderConfig(
+            mri=mri.SyntheticMRIConfig(shape=(args.volume,) * 3),
+            batch_size=args.batch,
+            subvolumes=args.subvolumes,
+            cube=24,
+        ),
+        steps=args.steps,
+        eval_every=100,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+    )
+    print(f"MeshNet GWM: {cfg.model.param_count()} params "
+          f"({cfg.model.param_count() * 4 / 1e6:.3f} MB f32) — paper: 5598 / 0.022 MB")
+    res = trainer.train(cfg)
+    print(f"\nheld-out macro Dice after {args.steps} steps: {res.final_dice:.4f}")
+    print(f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

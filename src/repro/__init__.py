@@ -1,0 +1,14 @@
+"""repro — production-grade JAX reproduction of Brainchop/MeshNet.
+
+Layers:
+  core/      the paper's contribution (MeshNet, patching, cropping,
+             streaming inference, connected components, conform)
+  models/    assigned architecture zoo (dense/MoE/SSM/hybrid/VLM/audio)
+  data/      synthetic MRI + token pipelines
+  training/  losses, optimizers, trainer, checkpointing
+  serving/   batched segmentation + LM serving engines
+  kernels/   Pallas TPU kernels (validated in interpret mode on CPU)
+  launch/    production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,116 @@
+"""3-D connected components — Brainchop's postprocessing stage (Fig. 1).
+
+Inference can leave small disconnected "noisy regions" (the paper attributes
+them to bias/variance/irreducible noise); Brainchop filters them with a 3-D
+connected-components pass. We implement label propagation entirely in JAX:
+
+  1. seed every foreground voxel with its unique linear index,
+  2. iterate ``label = min over 6-neighbourhood`` (masked) to fixpoint
+     via ``lax.while_loop`` — each sweep halves the worst-case diameter
+     because we propagate with doubling (pointer-jumping style sweeps).
+
+This is the classic data-parallel CC algorithm; it is TPU-friendly (pure
+elementwise min + shifts, no scatter) unlike the serial union-find used in
+CPU back-ends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _neighbor_min(labels: jax.Array) -> jax.Array:
+    """Min over the 6-neighbourhood (face adjacency), edge-clamped."""
+    out = labels
+    for axis in range(3):
+        fwd = jnp.concatenate(
+            [
+                jax.lax.slice_in_dim(labels, 1, labels.shape[axis], axis=axis),
+                jax.lax.slice_in_dim(labels, labels.shape[axis] - 1, labels.shape[axis], axis=axis),
+            ],
+            axis=axis,
+        )
+        bwd = jnp.concatenate(
+            [
+                jax.lax.slice_in_dim(labels, 0, 1, axis=axis),
+                jax.lax.slice_in_dim(labels, 0, labels.shape[axis] - 1, axis=axis),
+            ],
+            axis=axis,
+        )
+        out = jnp.minimum(out, jnp.minimum(fwd, bwd))
+    return out
+
+
+@jax.jit
+def connected_components(mask: jax.Array) -> jax.Array:
+    """Label connected components of a boolean (D, H, W) mask.
+
+    Returns int32 labels: background = -1, each component labelled by the
+    minimum linear index of its voxels (stable, permutation-invariant).
+    """
+    mask = mask.astype(bool)
+    n = mask.size
+    seed = jnp.arange(n, dtype=jnp.int32).reshape(mask.shape)
+    labels = jnp.where(mask, seed, _BIG)
+
+    def body(state):
+        labels, _ = state
+        new = jnp.where(mask, _neighbor_min(labels), _BIG)
+        # Pointer-jumping: jump each voxel to its current root's label.
+        # labels hold linear indices, so a gather contracts long chains.
+        jumped = jnp.where(mask, new.ravel()[jnp.clip(new.ravel(), 0, n - 1)].reshape(mask.shape), _BIG)
+        new = jnp.minimum(new, jumped)
+        return new, jnp.any(new != labels)
+
+    def cond(state):
+        return state[1]
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels, jnp.array(True)))
+    return jnp.where(mask, labels, -1)
+
+
+@jax.jit
+def component_sizes(labels: jax.Array) -> jax.Array:
+    """Voxel count per label id (flat, length = labels.size; sparse)."""
+    flat = labels.ravel()
+    valid = flat >= 0
+    return jnp.zeros((labels.size,), jnp.int32).at[jnp.where(valid, flat, 0)].add(
+        valid.astype(jnp.int32)
+    )
+
+
+@jax.jit
+def largest_component(mask: jax.Array) -> jax.Array:
+    """Keep only the largest connected component of a boolean mask."""
+    labels = connected_components(mask)
+    sizes = component_sizes(labels)
+    best = jnp.argmax(sizes)
+    return labels == best
+
+
+@functools.partial(jax.jit, static_argnames=("min_size",))
+def remove_small_components(mask: jax.Array, min_size: int) -> jax.Array:
+    """Drop components with fewer than ``min_size`` voxels (noise filter)."""
+    labels = connected_components(mask)
+    sizes = component_sizes(labels)
+    keep = sizes >= min_size
+    return jnp.where(labels >= 0, keep[jnp.clip(labels, 0)], False)
+
+
+def filter_segmentation(seg: jax.Array, num_classes: int, min_size: int = 64) -> jax.Array:
+    """Per-class noise filtering of a hard segmentation (D, H, W) int map.
+
+    Brainchop's postprocessing: for each non-background class, remove
+    connected regions smaller than ``min_size`` (reassigned to background 0).
+    """
+    out = seg
+    for c in range(1, num_classes):
+        mask = seg == c
+        kept = remove_small_components(mask, min_size)
+        out = jnp.where(mask & ~kept, 0, out)
+    return out

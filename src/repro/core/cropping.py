@@ -1,0 +1,89 @@
+"""Cropping intervention — run a cheap brain-mask model, crop the bounding
+box, run the expensive model on the crop (Tables VI/VII: cropping raises the
+success rate by ~18% via IPTW and cuts inference time by ~5 s, because the
+background air around the head is ~2/3 of the 256^3 volume).
+
+JIT-friendliness: a data-dependent bounding box produces dynamic shapes, so
+we crop to a *static* target size centred on the mask's bounding box with
+``dynamic_slice`` — the Brainchop trick of "requested texture size" becomes
+a static crop-shape picked from a ladder of compiled sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CropInfo(NamedTuple):
+    start: jax.Array  # (3,) int32 crop origin in the source volume
+    size: tuple[int, int, int]  # static crop shape
+
+
+def mask_bounding_box(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) inclusive-exclusive bounds of the True region, per axis."""
+    mask = mask.astype(bool)
+    bounds_lo, bounds_hi = [], []
+    for axis in range(3):
+        other = tuple(a for a in range(3) if a != axis)
+        line = jnp.any(mask, axis=other)
+        idx = jnp.arange(line.shape[0])
+        lo = jnp.min(jnp.where(line, idx, line.shape[0]))
+        hi = jnp.max(jnp.where(line, idx + 1, 0))
+        # Empty mask -> full volume.
+        lo = jnp.where(jnp.any(line), lo, 0)
+        hi = jnp.where(jnp.any(line), hi, line.shape[0])
+        bounds_lo.append(lo)
+        bounds_hi.append(hi)
+    return jnp.stack(bounds_lo), jnp.stack(bounds_hi)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def crop_to(vol: jax.Array, mask: jax.Array, size: tuple[int, int, int]) -> tuple[jax.Array, jax.Array]:
+    """Crop ``vol`` to a static ``size`` box centred on ``mask``'s bbox.
+
+    Returns (crop, start). The box is clamped inside the volume; if the mask
+    is larger than ``size`` the crop centre still tracks the bbox centre
+    (the caller picks ``size`` from the ladder via :func:`pick_crop_size`).
+    """
+    lo, hi = mask_bounding_box(mask)
+    centre = (lo + hi) // 2
+    start = centre - jnp.asarray(size) // 2
+    start = jnp.clip(start, 0, jnp.asarray(vol.shape[:3]) - jnp.asarray(size))
+    crop = jax.lax.dynamic_slice(vol, tuple(start), size)
+    return crop, start
+
+
+def uncrop(crop: jax.Array, start: jax.Array, full_shape: tuple[int, ...], fill=0) -> jax.Array:
+    """Paste a cropped result back into a full-size volume."""
+    out = jnp.full(full_shape, fill, dtype=crop.dtype)
+    return jax.lax.dynamic_update_slice(out, crop, tuple(start) + (0,) * (len(full_shape) - 3))
+
+
+# The "texture-size ladder": compiled crop sizes, one executable each.
+CROP_LADDER: tuple[tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (160, 160, 160),
+    (192, 192, 192),
+    (224, 224, 224),
+    (256, 256, 256),
+)
+
+
+def pick_crop_size(mask, ladder=CROP_LADDER, margin: int = 4) -> tuple[int, int, int]:
+    """Smallest ladder entry that contains the mask bbox + margin.
+
+    Runs on host (concrete values) — it chooses *which* compiled executable
+    to dispatch, exactly like Brainchop choosing the texture size.
+    """
+    lo, hi = mask_bounding_box(mask)
+    extent = jax.device_get(hi - lo) + 2 * margin
+    vol_shape = mask.shape
+    for size in ladder:
+        size = tuple(min(s, v) for s, v in zip(size, vol_shape))
+        if all(int(e) <= s for e, s in zip(extent, size)):
+            return size
+    return tuple(min(s, v) for s, v in zip(ladder[-1], vol_shape))

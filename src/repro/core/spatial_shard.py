@@ -1,0 +1,126 @@
+"""Distributed full-volume inference: the paper's sub-volume patching mapped
+onto a device mesh.
+
+Brainchop splits the volume into sub-cubes *in time* (sequential WebGL jobs)
+because a browser has one GPU. A TPU pod has hundreds of chips, so the same
+decomposition becomes *spatial sharding*: each device owns a Z-slab of the
+volume, and instead of re-reading overlapping context from HBM per cube, the
+overlap ("halo") is exchanged between neighbouring devices with
+``collective_permute`` before every dilated conv layer.
+
+Exactness: with a halo of ``dilation`` voxels per side per layer, the slab
+conv equals the full-volume conv — the distributed analogue of the
+``overlap >= RF`` rule in core/patching.py, paid incrementally per layer
+(total exchanged per side = sum(dilations) = RF radius).
+
+Implemented with ``shard_map`` so every collective is explicit — this is
+the module the dry-run exercises for the meshnet configs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import meshnet
+from repro.core.meshnet import MeshNetConfig
+
+
+def halo_exchange_z(x: jax.Array, halo: int, axis_name: str) -> jax.Array:
+    """Concatenate `halo` Z-slices from both neighbours onto a local slab.
+
+    x: (B, Dz_local, H, W, C) -> (B, Dz_local + 2*halo, H, W, C).
+    Pod edges receive zeros (the volume's zero 'same' padding).
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        pad = [(0, 0), (halo, halo), (0, 0), (0, 0), (0, 0)]
+        return jnp.pad(x, pad)
+    if x.shape[1] < halo:
+        raise ValueError(
+            f"local Z-slab ({x.shape[1]}) smaller than halo ({halo}): "
+            "use fewer spatial shards or a larger volume (need "
+            "D/shards >= max dilation)."
+        )
+    # No wraparound pairs: devices with no sender receive zeros, which is
+    # exactly the volume's zero 'same' padding at the pod edges.
+    fwd = [(i, i + 1) for i in range(n - 1)]  # send my tail to next
+    bwd = [(i, i - 1) for i in range(1, n)]  # send my head to prev
+    from_prev = jax.lax.ppermute(x[:, -halo:], axis_name, fwd)
+    from_next = jax.lax.ppermute(x[:, :halo], axis_name, bwd)
+    return jnp.concatenate([from_prev, x, from_next], axis=1)
+
+
+def _conv_layer_slab(layer, x, dilation: int, cfg: MeshNetConfig, axis_name: str):
+    """One MeshNet block on a Z-slab: halo exchange + valid-Z conv."""
+    x = halo_exchange_z(x, dilation, axis_name)
+    pad = dilation  # 'same' padding in H, W; Z context comes from the halo
+    out = jax.lax.conv_general_dilated(
+        x,
+        layer["w"],
+        (1, 1, 1),
+        [(0, 0), (pad, pad), (pad, pad)],
+        rhs_dilation=(dilation,) * 3,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    ) + layer["b"]
+    if cfg.use_batchnorm:
+        out = (out - layer["bn_mean"]) * jax.lax.rsqrt(layer["bn_var"] + 1e-5)
+        out = out * layer["bn_scale"] + layer["bn_bias"]
+    return jax.nn.relu(out)
+
+
+def sharded_apply(
+    params,
+    x: jax.Array,
+    cfg: MeshNetConfig,
+    mesh: Mesh,
+    *,
+    spatial_axis: str = "model",
+    batch_axis: str | None = "data",
+) -> jax.Array:
+    """Full-volume MeshNet inference with the volume Z-sharded over
+    ``spatial_axis`` and the batch over ``batch_axis``.
+
+    x: (B, D, H, W) or (B, D, H, W, 1); D must divide the spatial axis size.
+    """
+    if x.ndim == 4:
+        x = x[..., None]
+    batch_spec = batch_axis if batch_axis else None
+    in_spec = P(batch_spec, spatial_axis, None, None, None)
+
+    def slab_fn(params, xs):
+        for i, d in enumerate(cfg.dilations):
+            xs = _conv_layer_slab(params["layers"][i], xs, d, cfg, spatial_axis)
+        head = params["head"]
+        return meshnet.dilated_conv3d(xs, head["w"], head["b"], dilation=1)
+
+    fn = jax.shard_map(
+        slab_fn,
+        mesh=mesh,
+        in_specs=(P(), in_spec),
+        out_specs=in_spec,
+    )
+    # Lay inputs out to match the specs (callers may pass single-device arrays).
+    params = jax.device_put(params, NamedSharding(mesh, P()))
+    x = jax.device_put(x, NamedSharding(mesh, in_spec))
+    return fn(params, x)
+
+
+def make_sharded_infer(params, cfg: MeshNetConfig, mesh: Mesh, **kw):
+    """jit-compiled sharded inference fn: (B, D, H, W) -> logits."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def infer(x):
+        return sharded_apply(params, x, cfg, mesh, **kw)
+
+    return infer
+
+
+def replicate_params(params, mesh: Mesh):
+    """MeshNet weights are ~kB-scale: replicate everywhere (the paper ships
+    them to every client; we ship them to every chip)."""
+    sharding = NamedSharding(mesh, P())
+    return jax.device_put(params, sharding)

@@ -1,0 +1,115 @@
+"""Layer-by-layer progressive inference — Brainchop's memory strategy.
+
+The paper: "progressive utilization of the MeshNet model on a layer-by-layer
+basis, coupled with the strategic disposal of the MRI tensor from the
+preceding layer" — i.e. at any instant only one layer's weights + one
+activation live in memory.
+
+TPU/JAX adaptation: MeshNet's hidden layers 2..L are shape-uniform
+(C -> C, 3^3 kernels), so we *stack* their weights and run a
+``jax.lax.scan`` whose carry is the single live activation. XLA then
+allocates exactly one activation buffer (double-buffered) regardless of
+depth, and the per-layer dilation rides along as a scanned operand.
+Input/output buffers are donated by the jit wrapper in ops-level callers.
+
+This module is also the template for the transformer zoo: every assigned
+architecture scans over stacked layer params for the same reason.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import meshnet
+from repro.core.meshnet import MeshNetConfig
+
+
+def stack_layer_params(params) -> tuple[dict, dict, dict]:
+    """Split MeshNet params into (first_layer, stacked_middle, head).
+
+    Layer 1 has in_channels != channels, so it stays unstacked; layers
+    2..L-1 are stacked leaf-wise into arrays with a leading layer axis.
+    """
+    layers = params["layers"]
+    first = layers[0]
+    middle = jax.tree.map(lambda *xs: jnp.stack(xs), *layers[1:])
+    return first, middle, params["head"]
+
+
+def streaming_apply(params, x: jax.Array, cfg: MeshNetConfig) -> jax.Array:
+    """Memory-streamed forward pass: logits (B, D, H, W, classes).
+
+    Mathematically identical to ``meshnet.apply`` (inference mode); the
+    difference is the execution schedule: scan keeps one live activation.
+    """
+    if x.ndim == 4:
+        x = x[..., None]
+    first, middle, head = stack_layer_params(params)
+    dilations = jnp.asarray(cfg.dilations[1:], jnp.int32)
+
+    x, _ = meshnet.apply_layer(first, x, cfg.dilations[0], cfg, training=False)
+
+    dmax = int(max(cfg.dilations))
+
+    def step(carry, inp):
+        layer, dilation = inp
+        # Dilation is a *traced* scanned operand, so we cannot pass it to
+        # conv_general_dilated (static). Instead the 3^3 dilated conv is 27
+        # shifted taps: out[p] = sum_t w[t] * x[p + dilation*t]. Shifts are
+        # realised as dynamic_slice into a once-padded buffer (zero 'same'
+        # padding semantics; dynamic_slice accepts traced starts).
+        xp = jnp.pad(carry, [(0, 0)] + [(dmax, dmax)] * 3 + [(0, 0)])
+        w3 = layer["w"]  # (3, 3, 3, Cin, Cout)
+        acc = jnp.zeros(carry.shape[:-1] + (w3.shape[-1],), carry.dtype)
+        for tz in (-1, 0, 1):
+            for ty in (-1, 0, 1):
+                for tx in (-1, 0, 1):
+                    start = (
+                        0,
+                        dmax + dilation * tz,
+                        dmax + dilation * ty,
+                        dmax + dilation * tx,
+                        0,
+                    )
+                    tap = jax.lax.dynamic_slice(xp, start, carry.shape)
+                    acc = acc + jnp.einsum(
+                        "bdhwi,io->bdhwo", tap, w3[tz + 1, ty + 1, tx + 1]
+                    )
+        out = acc + layer["b"]
+        if cfg.use_batchnorm:
+            out = (out - layer["bn_mean"]) * jax.lax.rsqrt(layer["bn_var"] + 1e-5)
+            out = out * layer["bn_scale"] + layer["bn_bias"]
+        return jax.nn.relu(out), None
+
+    x, _ = jax.lax.scan(step, x, (middle, dilations))
+    return meshnet.dilated_conv3d(x, head["w"], head["b"], dilation=1)
+
+
+def streaming_apply_unrolled(params, x: jax.Array, cfg: MeshNetConfig) -> jax.Array:
+    """Variant without the padded-kernel trick: a Python loop over layers
+    with explicit buffer donation between steps via jit boundaries.
+
+    Closest to what Brainchop literally does (one WebGL program per layer,
+    dispose the previous tensor). Used for comparison in benchmarks; the
+    scan version is the production path.
+    """
+    if x.ndim == 4:
+        x = x[..., None]
+
+    @jax.jit
+    def run_first(layer, x):
+        out, _ = meshnet.apply_layer(layer, x, cfg.dilations[0], cfg, training=False)
+        return out
+
+    x = run_first(params["layers"][0], x)
+    for i, d in enumerate(cfg.dilations[1:], start=1):
+        # donate_argnums frees the previous activation as soon as the layer
+        # kernel has consumed it — the "strategic disposal".
+        step = jax.jit(
+            lambda layer, x, d=d: meshnet.apply_layer(layer, x, d, cfg, training=False)[0],
+            donate_argnums=(1,),
+        )
+        x = step(params["layers"][i], x)
+    head = params["head"]
+    return meshnet.dilated_conv3d(x, head["w"], head["b"], dilation=1)

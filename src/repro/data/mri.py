@@ -1,0 +1,148 @@
+"""Synthetic structural-MRI data pipeline.
+
+The paper trains on HCP T1 volumes with FreeSurfer-derived GWM labels —
+a gated dataset we cannot ship (DESIGN.md §1 simulates this gate). This
+module generates procedural "brains" whose GWM ground truth is known by
+construction, with T1-like intensities + bias field + Rician-ish noise, so
+the whole train->segment->postprocess loop (and the MeshNet-vs-U-Net
+comparison) runs end-to-end with a real learning signal.
+
+Anatomy model (crude but label-faithful):
+  an ellipsoidal head; inside it a smooth radial field r(v) deformed by
+  low-frequency noise defines nested shells:
+    r < r_wm            -> white matter (label 2, bright ~0.75)
+    r_wm <= r < r_gm    -> gray matter  (label 1, mid ~0.45)
+    r >= r_gm           -> background/CSF/skull (label 0, dark)
+  plus ventricles (dark holes inside WM, label 0) — gives the classic
+  GM-envelope-around-WM topology MeshNet must learn with context.
+
+Also provides the paper's DataLoader (§III-A): nibabel loading is replaced
+by the generator; CubeDivider sub-volume extraction, one-hot prep and
+batching are implemented as described.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticMRIConfig:
+    shape: tuple[int, int, int] = (64, 64, 64)
+    noise_sigma: float = 0.04
+    bias_field_strength: float = 0.15
+    deform_strength: float = 0.12  # low-frequency radius deformation
+    ventricle_prob: float = 1.0
+    dtype: np.dtype = np.float32
+
+
+def _smooth_noise(key, shape, cutoff: int = 6) -> jax.Array:
+    """Low-frequency noise: random coarse grid, trilinearly upsampled."""
+    coarse_shape = tuple(max(2, s // cutoff) for s in shape)
+    coarse = jax.random.normal(key, coarse_shape)
+    return jax.image.resize(coarse, shape, method="trilinear")
+
+
+def generate(key: jax.Array, cfg: SyntheticMRIConfig = SyntheticMRIConfig()) -> tuple[jax.Array, jax.Array]:
+    """One synthetic (T1 volume, GWM labels) pair.
+
+    Returns vol (D,H,W) float in [0,1], labels (D,H,W) int32 in {0,1,2}.
+    """
+    d, h, w = cfg.shape
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    zz, yy, xx = jnp.meshgrid(
+        jnp.linspace(-1, 1, d), jnp.linspace(-1, 1, h), jnp.linspace(-1, 1, w), indexing="ij"
+    )
+    # Random per-subject head axes (anisotropy ±15%).
+    axes = 0.78 + 0.12 * jax.random.uniform(k1, (3,))
+    r = jnp.sqrt((zz / axes[0]) ** 2 + (yy / axes[1]) ** 2 + (xx / axes[2]) ** 2)
+    r = r + cfg.deform_strength * _smooth_noise(k2, cfg.shape)
+
+    r_wm, r_gm = 0.55, 0.8
+    wm = r < r_wm
+    gm = (r >= r_wm) & (r < r_gm)
+
+    # Ventricles: a small ellipsoid pair deep in WM relabelled background.
+    vz = 0.12 * (jax.random.uniform(k4, ()) - 0.5)
+    vent_r = jnp.sqrt(((zz - vz) / 0.18) ** 2 + (yy / 0.28) ** 2 + (xx / 0.12) ** 2)
+    vent = (vent_r < 1.0) & wm
+    wm = wm & ~vent
+
+    labels = jnp.zeros(cfg.shape, jnp.int32)
+    labels = jnp.where(gm, 1, labels)
+    labels = jnp.where(wm, 2, labels)
+
+    # T1-like intensities: WM bright, GM mid, CSF/vent dark, skull shell dim.
+    vol = jnp.zeros(cfg.shape, jnp.float32)
+    vol = jnp.where(gm, 0.45, vol)
+    vol = jnp.where(wm, 0.75, vol)
+    vol = jnp.where(vent, 0.12, vol)
+    skull = (r >= r_gm) & (r < r_gm + 0.08)
+    vol = jnp.where(skull, 0.25, vol)
+
+    bias = 1.0 + cfg.bias_field_strength * _smooth_noise(k3, cfg.shape)
+    vol = vol * bias + cfg.noise_sigma * jax.random.normal(k5, cfg.shape)
+    return jnp.clip(vol, 0.0, 1.0), labels
+
+
+@dataclasses.dataclass(frozen=True)
+class DataLoaderConfig:
+    """§III-A DataLoader: batching + optional sub-volume generation."""
+
+    mri: SyntheticMRIConfig = SyntheticMRIConfig()
+    batch_size: int = 2
+    subvolumes: bool = False  # CubeDivider path
+    cube: int = 32
+    overlap: int = 0
+    num_classes: int = 3
+    one_hot: bool = False
+    seed: int = 0
+
+
+class DataLoader:
+    """Streams (volume, labels) batches; optionally sub-cube batches.
+
+    Mirrors the paper's DataLoaderClass: (1) load, (2) optional CubeDivider
+    split, (3) reshape/one-hot prep, (4) batching.
+    """
+
+    def __init__(self, cfg: DataLoaderConfig):
+        self.cfg = cfg
+        self._gen = jax.jit(lambda k: generate(k, cfg.mri))
+
+    def __iter__(self) -> Iterator[tuple[jax.Array, jax.Array]]:
+        return self.batches()
+
+    def batches(self) -> Iterator[tuple[jax.Array, jax.Array]]:
+        key = jax.random.PRNGKey(self.cfg.seed)
+        while True:
+            key, *subkeys = jax.random.split(key, self.cfg.batch_size + 1)
+            vols, labs = zip(*(self._gen(k) for k in subkeys))
+            vol = jnp.stack(vols)
+            lab = jnp.stack(labs)
+            if self.cfg.subvolumes:
+                vol, lab = self._to_subvolumes(vol, lab, key)
+            if self.cfg.one_hot:
+                lab = jax.nn.one_hot(lab, self.cfg.num_classes)
+            yield vol, lab
+
+    def _to_subvolumes(self, vol, lab, key):
+        """Random aligned sub-cube per sample (training-time patching)."""
+        c = self.cfg.cube
+        b, d, h, w = vol.shape
+        keys = jax.random.split(key, 3)
+        z0 = jax.random.randint(keys[0], (b,), 0, d - c + 1)
+        y0 = jax.random.randint(keys[1], (b,), 0, h - c + 1)
+        x0 = jax.random.randint(keys[2], (b,), 0, w - c + 1)
+
+        def cut(v, l, z, y, x):
+            vv = jax.lax.dynamic_slice(v, (z, y, x), (c, c, c))
+            ll = jax.lax.dynamic_slice(l, (z, y, x), (c, c, c))
+            return vv, ll
+
+        return jax.vmap(cut)(vol, lab, z0, y0, x0)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+The serving hot-spot (decode_32k / long_500k shapes): one query token
+attends to a (B, S, KV, hd) cache. HBM traffic is the roofline term
+(§Roofline: decode is memory-bound), so the kernel streams the cache in
+S-blocks exactly once, keeping the online-softmax state (acc, max, denom)
+resident in VMEM across the sequential grid — no (S,) score vector ever
+round-trips to HBM, and the GQA head-group replication happens in-register
+instead of materialising repeated K/V (which `jnp.repeat` would write to
+HBM: H/KV x cache-size of avoidable traffic).
+
+Grid: (B, S/block_s); TPU grids execute sequentially over the minor axis,
+so the accumulator outputs (constant index_map) implement the cross-block
+reduction — the same pattern as kernels/dice.py.
+
+VMEM per step: block_s x KV x hd x 2 (K+V) + q (H x hd) + state.
+At block_s=512, KV=8, hd=128 bf16: 1.05 MB — far under the ~16 MB budget;
+block_s can grow to amortise grid overhead on long caches.
+
+Masking: positions > pos (ring-buffer semantics are handled by the caller's
+`valid_len`) are masked with -1e30 before the running max update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                        *, block_s: int, groups: int, scale: float):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (H, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_s, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    kv = k.shape[1]
+    hd = k.shape[2]
+    qg = q.reshape(kv, groups, hd)  # GQA: H = KV * groups
+
+    # scores[s, kv, g] = <q[kv, g], k[s, kv]>
+    s = jnp.einsum("kgd,skd->skg", qg, k) * scale  # (block_s, KV, G)
+    kpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s, 1, 1), 0)
+    valid = kpos <= pos_ref[0]
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev = m_ref[0]  # (KV, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=0))
+    p = jnp.exp(s - m_new[None])  # (block_s, KV, G)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=0)
+    acc_ref[0] = acc_ref[0] * corr[..., None] + jnp.einsum("skg,skd->kgd", p, v)
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, 1, H, hd); k/v_cache: (B, S, KV, hd); pos: scalar int32 —
+    attends to cache slots [0, pos]. Returns (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    assert H % KV == 0, (H, KV)
+    groups = H // KV
+    pad = (-S) % block_s
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nS = k_cache.shape[1] // block_s
+    scale = 1.0 / (hd ** 0.5)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+
+    acc, m, l = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, block_s=block_s, groups=groups, scale=scale
+        ),
+        grid=(B, nS),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, s: (0,)),
+            pl.BlockSpec((1, 1, H, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, block_s, KV, hd), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, groups, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, groups), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, KV, groups), lambda b, s: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, groups, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, groups), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, groups), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Pallas kernel: fused per-class Dice count accumulator.
+
+Brainchop computes Dice from binary masks per label (eq. 2). Materialising
+C one-hot masks of a 256^3 volume costs C x 67 MB of HBM traffic; this
+kernel streams the two int label volumes once, accumulating per-class
+(intersection, |pred|, |truth|) counts across sequential grid steps into a
+single VMEM-resident (C, 3) block (grid-carried accumulation — TPU grids
+execute sequentially, the canonical Pallas reduction pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dice_kernel(pred_ref, truth_ref, out_ref, *, num_classes: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pred = pred_ref[...]
+    truth = truth_ref[...]
+    # classes on a new minor axis -> three (C,) count vectors per block
+    cls = jax.lax.broadcasted_iota(jnp.int32, (1, num_classes), 1)
+    p1 = (pred.reshape(-1, 1) == cls).astype(jnp.int32)  # (N, C)
+    t1 = (truth.reshape(-1, 1) == cls).astype(jnp.int32)
+    inter = jnp.sum(p1 * t1, axis=0)
+    psum = jnp.sum(p1, axis=0)
+    tsum = jnp.sum(t1, axis=0)
+    out_ref[...] += jnp.stack([inter, psum, tsum], axis=1)  # (C, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block", "interpret"))
+def dice_counts(
+    pred: jax.Array,
+    truth: jax.Array,
+    num_classes: int,
+    *,
+    block: int = 65536,
+    interpret: bool = True,
+) -> jax.Array:
+    """(C, 3) int32 counts [intersection, |pred_c|, |truth_c|] per class."""
+    pred = pred.reshape(-1).astype(jnp.int32)
+    truth = truth.reshape(-1).astype(jnp.int32)
+    n = pred.shape[0]
+    pad = (-n) % block
+    if pad:
+        # Pad with class -1 (matches no class) on both sides.
+        pred = jnp.concatenate([pred, jnp.full((pad,), -1, jnp.int32)])
+        truth = jnp.concatenate([truth, jnp.full((pad,), -2, jnp.int32)])
+    grid = (pred.shape[0] // block,)
+    return pl.pallas_call(
+        functools.partial(_dice_kernel, num_classes=num_classes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_classes, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_classes, 3), jnp.int32),
+        interpret=interpret,
+    )(pred, truth)
+
+
+def dice_from_counts(counts: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """Macro Dice from (C, 3) counts; empty classes score 1."""
+    inter = counts[:, 0].astype(jnp.float32)
+    denom = (counts[:, 1] + counts[:, 2]).astype(jnp.float32)
+    per_class = jnp.where(denom == 0, 1.0, 2.0 * inter / (denom + eps))
+    return jnp.mean(per_class)

@@ -1,0 +1,166 @@
+"""Pallas TPU kernel for MeshNet's hot-spot: the 3^3 *dilated* 3-D conv.
+
+Why a custom kernel (hardware adaptation, DESIGN.md §2)
+-------------------------------------------------------
+Brainchop's WebGL backend runs this conv as fragment-shader passes over 2-D
+texture tilings of the volume; the cost model there is texture bandwidth.
+On TPU the equivalent wall is HBM->VMEM traffic: a 256^3 x 5ch f32 volume is
+335 MB, read 27x by a naive gather-per-tap schedule. This kernel tiles the
+volume into VMEM-resident cubes and reads each input voxel exactly once per
+neighbourhood (27 disjoint blocks streamed per output block), computing all
+27 taps from VMEM.
+
+TPU-native design notes
+  * channels-last layout: C rides the lane dimension. MeshNet's C=5 is far
+    below the 128-lane MXU contraction, so the einsum per tap is a VPU
+    (8x128 vreg) FMA, not an MXU matmul — a C<=8 model is *memory-bound* on
+    TPU and the win comes from the blocking, not systolic compute. The
+    kernel is still correct (and becomes MXU-bound) for wide variants
+    (failsafe 21ch / atlas 18ch) where Cin x Cout taps start to matter.
+  * block size: `block` (default 16 = max MeshNet dilation) gives
+    27 x block^3 x C x 4 B of VMEM-resident input — 2.2 MB at C=5 f32,
+    comfortably under the ~16 MB VMEM budget, with hardware-aligned
+    (8, 128) tiles when W*C is padded to the lane multiple by Mosaic.
+  * halo handling: BlockSpec tiles are disjoint, so the +-dilation
+    neighbourhood is expressed as 27 *offset views of the same padded
+    input* (index maps i+dz-1 etc.), the canonical Pallas halo pattern.
+  * optional fused affine+ReLU epilogue: folds inference-mode BatchNorm and
+    activation into the conv's output block while it is still in VMEM
+    (saves one full HBM round-trip per layer — see EXPERIMENTS.md §Perf).
+
+Validated in interpret mode on CPU against kernels/ref.py for every
+(shape, dtype, dilation, channels) in the test sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(*refs, dilation: int, block: int, fuse_affine: bool):
+    """Kernel body. refs = 27 input views + w + b (+ scale, offset) + out."""
+    if fuse_affine:
+        *xs, w_ref, b_ref, s_ref, o_ref, out_ref = refs
+    else:
+        *xs, w_ref, b_ref, out_ref = refs
+        s_ref = o_ref = None
+    # Assemble the (3b, 3b, 3b, Cin) neighbourhood from 27 (b,b,b,Cin) views.
+    # Loads stay in VMEM; concatenate is a register/VMEM reshuffle.
+    planes = []
+    for zi in range(3):
+        rows = []
+        for yi in range(3):
+            cols = [xs[zi * 9 + yi * 3 + xi][0] for xi in range(3)]
+            rows.append(jnp.concatenate(cols, axis=2))
+        planes.append(jnp.concatenate(rows, axis=1))
+    nb = jnp.concatenate(planes, axis=0)  # (3b, 3b, 3b, Cin)
+
+    w = w_ref[...]  # (3, 3, 3, Cin, Cout)
+    acc = jnp.zeros((block, block, block, w.shape[-1]), jnp.float32)
+    d = dilation
+    b = block
+    for tz in (-1, 0, 1):
+        for ty in (-1, 0, 1):
+            for tx in (-1, 0, 1):
+                # Output voxel p reads input p + t*d (correlation, as XLA).
+                sl = nb[
+                    b + tz * d : 2 * b + tz * d,
+                    b + ty * d : 2 * b + ty * d,
+                    b + tx * d : 2 * b + tx * d,
+                    :,
+                ]
+                acc = acc + jnp.einsum(
+                    "zyxi,io->zyxo",
+                    sl.astype(jnp.float32),
+                    w[tz + 1, ty + 1, tx + 1].astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+    out = acc + b_ref[...].astype(jnp.float32)
+    if fuse_affine:
+        out = out * s_ref[...].astype(jnp.float32) + o_ref[...].astype(jnp.float32)
+        out = jnp.maximum(out, 0.0)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dilation", "block", "interpret", "fuse_affine"),
+)
+def dilated_conv3d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    dilation: int = 1,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    block: int = 16,
+    interpret: bool = True,
+    fuse_affine: bool = False,
+) -> jax.Array:
+    """'Same'-padded 3-D dilated conv via Pallas.
+
+    x: (B, D, H, W, Cin); w: (3, 3, 3, Cin, Cout); b: (Cout,).
+    If ``fuse_affine``: returns relu(conv(x) * scale + offset) — the folded
+    inference BatchNorm epilogue. Requires ``dilation <= block`` and spatial
+    dims divisible by ``block`` (the ops wrapper pads as needed).
+    """
+    if dilation > block:
+        raise ValueError(f"dilation {dilation} > block {block}")
+    B, D, H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    assert D % block == H % block == W % block == 0, (x.shape, block)
+    # One extra block of zero padding per side supplies the halo.
+    xp = jnp.pad(x, [(0, 0)] + [(block, block)] * 3 + [(0, 0)])
+
+    grid = (B, D // block, H // block, W // block)
+    blk = (1, block, block, block, Cin)
+
+    def mk_index(dz, dy, dx):
+        return lambda bi, zi, yi, xi: (bi, zi + dz, yi + dy, xi + dx, 0)
+
+    in_specs = [
+        pl.BlockSpec(blk, mk_index(dz, dy, dx))
+        for dz in range(3)
+        for dy in range(3)
+        for dx in range(3)
+    ]
+    in_specs.append(pl.BlockSpec(w.shape, lambda *_: (0,) * 5))  # weights
+    in_specs.append(pl.BlockSpec(b.shape, lambda *_: (0,)))  # bias
+    args = [xp] * 27 + [w, b]
+    if fuse_affine:
+        if scale is None:
+            scale = jnp.ones((Cout,), x.dtype)
+        if offset is None:
+            offset = jnp.zeros((Cout,), x.dtype)
+        in_specs.append(pl.BlockSpec(scale.shape, lambda *_: (0,)))
+        in_specs.append(pl.BlockSpec(offset.shape, lambda *_: (0,)))
+        args += [scale, offset]
+
+    out_spec = pl.BlockSpec(
+        (1, block, block, block, Cout), lambda bi, zi, yi, xi: (bi, zi, yi, xi, 0)
+    )
+    kernel = functools.partial(
+        _conv_kernel, dilation=dilation, block=block, fuse_affine=fuse_affine
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D, H, W, Cout), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def vmem_bytes(block: int, cin: int, cout: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set: 27 input views + weights + out block."""
+    inp = 27 * block**3 * cin * dtype_bytes
+    out = block**3 * cout * 4  # f32 accumulator
+    wgt = 27 * cin * cout * dtype_bytes
+    return inp + out + wgt

@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles what the raw kernels don't: arbitrary spatial shapes (pad to block
+multiples + slice back), dtype policy, BatchNorm folding, backend dispatch
+(interpret on CPU hosts, compiled on TPU), and a kernel-backed MeshNet
+forward pass (`meshnet_apply`) that fuses conv+BN+ReLU per layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dice as dice_kernel
+from repro.kernels import dilated_conv3d as conv_kernel
+
+# interpret=True on CPU (this container); compiled Mosaic on real TPU.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to_multiple(x: jax.Array, m: int):
+    pads = [(0, (-s) % m) for s in x.shape[1:4]]
+    if not any(p[1] for p in pads):
+        return x, x.shape
+    return jnp.pad(x, [(0, 0)] + pads + [(0, 0)]), x.shape
+
+
+def dilated_conv3d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    dilation: int = 1,
+    scale=None,
+    offset=None,
+    fuse_affine: bool = False,
+    block: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """'Same' 3-D dilated conv for any (B, D, H, W, Cin)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    if x.ndim == 4:
+        x = x[..., None]
+    xp, orig_shape = _pad_to_multiple(x, block)
+    out = conv_kernel.dilated_conv3d(
+        xp, w, b,
+        dilation=dilation, scale=scale, offset=offset,
+        block=block, interpret=interpret, fuse_affine=fuse_affine,
+    )
+    if xp.shape != x.shape:
+        out = out[:, : orig_shape[1], : orig_shape[2], : orig_shape[3], :]
+    return out
+
+
+def fold_batchnorm(layer: dict, eps: float = 1e-5) -> tuple[jax.Array, jax.Array]:
+    """Fold inference BN into (scale, offset) for the fused epilogue."""
+    inv = jax.lax.rsqrt(layer["bn_var"] + eps)
+    scale = layer["bn_scale"] * inv
+    offset = layer["bn_bias"] - layer["bn_mean"] * scale
+    return scale, offset
+
+
+def meshnet_apply(params, x: jax.Array, cfg, *, block: int = 16, interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed MeshNet inference forward (== meshnet.apply, eval mode).
+
+    Each hidden layer is ONE fused Pallas call (conv+BN+ReLU epilogue):
+    activations make a single HBM round-trip per layer instead of three.
+    """
+    if x.ndim == 4:
+        x = x[..., None]
+    for i, d in enumerate(cfg.dilations):
+        layer = params["layers"][i]
+        if cfg.use_batchnorm:
+            scale, offset = fold_batchnorm(layer)
+        else:
+            scale = offset = None
+        x = dilated_conv3d(
+            x, layer["w"], layer["b"],
+            dilation=d, scale=scale, offset=offset, fuse_affine=True,
+            block=block, interpret=interpret,
+        )
+    head = params["head"]
+    # 1x1x1 head: a plain einsum (pointwise) — no spatial kernel needed.
+    return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+
+
+def dice(pred: jax.Array, truth: jax.Array, num_classes: int, *, interpret: bool | None = None) -> jax.Array:
+    """Macro Dice score via the fused count-accumulator kernel."""
+    interpret = _INTERPRET if interpret is None else interpret
+    counts = dice_kernel.dice_counts(pred, truth, num_classes, interpret=interpret)
+    return dice_kernel.dice_from_counts(counts)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dilated_conv3d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    dilation: int = 1,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    fuse_affine: bool = False,
+) -> jax.Array:
+    """Reference 'same'-padded 3-D dilated conv (+ optional affine+ReLU)."""
+    k = w.shape[0]
+    pad = dilation * (k - 1) // 2
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1, 1),
+        padding=[(pad, pad)] * 3,
+        rhs_dilation=(dilation,) * 3,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    ) + b.astype(jnp.float32)
+    if fuse_affine:
+        s = jnp.ones((w.shape[-1],), jnp.float32) if scale is None else scale.astype(jnp.float32)
+        o = jnp.zeros((w.shape[-1],), jnp.float32) if offset is None else offset.astype(jnp.float32)
+        out = jnp.maximum(out * s + o, 0.0)
+    return out.astype(x.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, pos) -> jax.Array:
+    """Reference single-token GQA decode attention over a KV cache.
+
+    q: (B, 1, H, hd); k/v: (B, S, KV, hd); attends to slots [0, pos].
+    """
+    import numpy as np
+
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    kk = jnp.repeat(k, H // KV, axis=2)
+    vv = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / np.sqrt(hd)
+    valid = jnp.arange(k.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def dice_counts(pred: jax.Array, truth: jax.Array, num_classes: int) -> jax.Array:
+    """Per-class (intersection, |pred_c|, |truth_c|) counts, shape (C, 3)."""
+    rows = []
+    for c in range(num_classes):
+        x = pred == c
+        y = truth == c
+        rows.append(
+            jnp.stack(
+                [
+                    jnp.sum(x & y).astype(jnp.int32),
+                    jnp.sum(x).astype(jnp.int32),
+                    jnp.sum(y).astype(jnp.int32),
+                ]
+            )
+        )
+    return jnp.stack(rows)

@@ -1,0 +1,210 @@
+"""Sharding rules: param/opt/batch/cache pytrees -> PartitionSpecs.
+
+Scheme (DESIGN.md §4): tensor-parallel over "model" for the contraction-
+adjacent dims (heads/d_ff/vocab), FSDP over the batch axes ("data", plus
+"pod" when multi-pod) for the d_model-adjacent dims, batch over the batch
+axes. Stacked scan params (leading repeats dim) are handled by left-padding
+the rule's spec with None. Any dim not divisible by its axis size falls
+back to replication (e.g. whisper's 51865 vocab over 16-way model).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_mod
+
+# Rule table: leaf name -> spec template for the *trailing* dims.
+# FSDP = the batch/FSDP axis tuple, TP = "model".
+_F, _T = "__fsdp__", "__tp__"
+
+_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed": (_T, _F),
+    "unembed": (_F, _T),
+    "projector": (None, _T),
+    # attention
+    "wq": (_F, _T),
+    "wk": (_F, _T),
+    "wv": (_F, _T),
+    "wo": (_T, _F),
+    "bq": (_T,),
+    "bk": (_T,),
+    "bv": (_T,),
+    # mlp (also matches moe stacked variants via left-padding)
+    "w_gate": (_F, _T),
+    "w_up": (_F, _T),
+    "w_down": (_T, _F),
+    "b_up": (_T,),
+    "b_down": (None,),
+    "router": (_F, None),
+    # mamba
+    "w_in": (_F, _T),
+    "conv_w": (None, _T),
+    "conv_b": (_T,),
+    "w_bcdt": (_T, None),
+    "w_dt": (None, _T),
+    "log_a": (_T, None),
+    "d_skip": (_T,),
+    # rwkv
+    "w_r": (_F, _T),
+    "w_k": (_F, _T),
+    "w_v": (_T, _F),  # (f, d) in cmix; tmix w_v (d,d) also fine transposed
+    "w_g": (_F, _T),
+    "w_o": (_T, _F),
+    "w_dec1": (_F, None),
+    "w_dec2": (None, None),
+    "w_out": (_T, _F),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def param_specs(params, mesh) -> Any:
+    """PartitionSpec pytree for params (or matching-structure opt state)."""
+    fsdp = mesh_mod.batch_axes(mesh)
+    tp = "model"
+
+    fsdp_size = mesh_mod.axis_size(mesh, fsdp)
+    fsdp_ax: Any = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def spec_of(path, leaf):
+        name = _leaf_name(path)
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()  # norms, biases, mus, bonuses: replicate
+        # MoE expert tensors w_up (E, d, f) / w_down (E, f, d) — stacked to
+        # 4-D under the repeats axis. Expert-parallel over the FSDP axis
+        # when E divides it: dispatch moves activations (all-to-all-sized),
+        # not expert weights (the FSDP-gather pathology: ~1.5 TB/step on
+        # jamba). Fallback: TP only, replicated over data.
+        if name in ("w_up", "w_down") and leaf.ndim >= 3 and "router" not in str(path):
+            trailing = leaf.shape[-3:]
+            e = trailing[0]
+            tp_dim = 2 if name == "w_up" else 1  # f position in (E, d, f)/(E, f, d)
+            tp_ok = trailing[tp_dim] % mesh.shape[tp] == 0
+            # All block params carry a leading repeats axis, so MoE expert
+            # tensors are exactly the 4-D case ((R, E, d, f)); 3-D here is a
+            # stacked *dense* (R, d, f) which the generic rule handles.
+            is_moe = leaf.ndim == 4
+            if is_moe:
+                dims = [None] * (leaf.ndim - 3)
+                inner = [None, None]
+                inner[tp_dim - 1] = tp if tp_ok else None
+                if e % fsdp_size == 0:
+                    dims.append(fsdp_ax)  # expert-parallel
+                else:
+                    # E indivisible (grok's 8 over 16): FSDP the d dim so the
+                    # 2x-larger-than-HBM expert stack still shards somewhere.
+                    dims.append(None)
+                    d_pos = 0 if tp_dim == 2 else 1  # d position within inner
+                    if trailing[1 + d_pos] % fsdp_size == 0:
+                        inner[d_pos] = fsdp_ax
+                return P(*(dims + inner))
+        # rwkv tmix w_v is (d, d) with rule (_T, _F) from cmix; both dims d —
+        # sharding (tp, fsdp) is equally valid, so no special-casing needed.
+        dims: list = [None] * (leaf.ndim - len(rule))
+        for ax_tmpl, size in zip(rule, leaf.shape[leaf.ndim - len(rule):]):
+            if ax_tmpl == _F:
+                ax: Any = fsdp_ax
+                div = fsdp_size
+            elif ax_tmpl == _T:
+                ax = tp
+                div = mesh.shape[tp]
+            else:
+                ax, div = None, 1
+            dims.append(ax if (ax is not None and size % div == 0) else None)
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def opt_specs(opt_state, pspecs) -> Any:
+    """Optimizer state specs: mu/nu mirror params; step replicated."""
+    from repro.training.optimizer import AdamWState
+
+    return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def batch_specs(batch_shapes: dict, mesh, global_batch: int) -> dict:
+    """Specs for the input batch dict: batch dim over the batch axes when
+    divisible, else replicated (long_500k's B=1)."""
+    axes = mesh_mod.batch_axes(mesh)
+    dp = mesh_mod.axis_size(mesh, axes)
+    bax: Any = axes if len(axes) > 1 else axes[0]
+    b = bax if global_batch % dp == 0 else None
+    return {k: P(*([b] + [None] * (len(shp) - 1))) for k, shp in batch_shapes.items()}
+
+
+def cache_specs(cache, mesh, batch: int) -> Any:
+    """Decode-cache specs. Batch dim over batch axes when divisible; for
+    B=1 (long_500k) the KV sequence dim shards over "data" instead —
+    sequence-sharded cache, the paper's patching idea in sequence space."""
+    axes = mesh_mod.batch_axes(mesh)
+    dp = mesh_mod.axis_size(mesh, axes)
+    bax: Any = axes if len(axes) > 1 else axes[0]
+    shard_batch = batch % dp == 0 and batch >= dp
+    tp = "model"
+    tp_size = mesh.shape[tp]
+
+    def spec_of(path, leaf):
+        name = _leaf_name(path)
+        b = bax if shard_batch else None
+        if name in ("k", "v", "ek", "ev", "ks", "vs"):  # (R, B, S, KV, hd|1)
+            # Sequence dim over "model" (partial-softmax decode attention);
+            # additionally over "data" when the batch is not sharded
+            # (long_500k's B=1) — the sequence-sharded cache of DESIGN.md §4.
+            s_candidates = [tp] if shard_batch else ["data", tp]
+            s_ax: Any = None
+            for cand in ([tuple(s_candidates)] if len(s_candidates) > 1 else s_candidates):
+                size = mesh_mod.axis_size(mesh, cand) if not isinstance(cand, str) else mesh.shape[cand]
+                if leaf.shape[2] % size == 0:
+                    s_ax = cand
+                    break
+            if s_ax is None:
+                for cand in s_candidates:
+                    if leaf.shape[2] % mesh.shape[cand] == 0:
+                        s_ax = cand
+                        break
+            return P(None, b, s_ax, None, None)
+        if name == "conv":  # (R, B, dc-1, din)
+            din_ax = tp if leaf.shape[-1] % tp_size == 0 else None
+            return P(None, b, None, din_ax)
+        if name == "h":  # (R, B, din, ds)
+            din_ax = tp if leaf.shape[-2] % tp_size == 0 else None
+            return P(None, b, din_ax, None)
+        if name == "s":  # (R, B, H, hs, hs)
+            h_ax = tp if leaf.shape[2] % tp_size == 0 else None
+            return P(None, b, h_ax, None, None)
+        if name in ("last", "last_c"):  # (R, B, 1, d)
+            return P(None, b, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def to_named(specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def with_sharding(shapes, specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes,
+        specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )

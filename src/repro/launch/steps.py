@@ -1,0 +1,215 @@
+"""Step builders + abstract input specs for the dry-run and the drivers.
+
+For every (arch, input-shape) pair this module gives:
+  build_step(cfg, mode)    -> the jit-able python callable
+  input_specs(cfg, shape_name, mesh) -> pytree of sharded ShapeDtypeStructs
+so the dry-run is exactly:
+  jax.jit(step).lower(*input_specs(...)).compile()
+No parameter tensors are ever materialised: shapes come from
+``jax.eval_shape`` over the init functions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_mod
+from repro.launch import sharding
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.training import losses
+from repro.training import optimizer as opt_mod
+
+OPT_CONFIG = opt_mod.AdamWConfig(lr=3e-4, weight_decay=0.1, grad_clip_norm=1.0)
+
+
+# ------------------------------------------------------------------ steps ---
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_mod.AdamWConfig = OPT_CONFIG,
+    act_spec=None,
+    microbatches: int = 1,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Full training step: forward (CE + MoE aux), backward, global-norm clip,
+    AdamW update. Layer stacks are scanned; the loss is computed in f32.
+
+    ``microbatches > 1`` accumulates gradients over M sequential slices of
+    the global batch (the paper's patching discipline applied to the train
+    working set: per-device activation + MoE capacity buffers shrink by M
+    at the cost of M x weight re-gathers). EXPERIMENTS.md §Perf H7.
+    """
+
+    def loss_fn(params, batch):
+        logits, aux = MD.forward(params, batch, cfg, act_spec=act_spec)
+        loss = losses.lm_loss(logits, batch["labels"])
+        return loss + cfg.router_aux_weight * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            m = microbatches
+
+            def slice_mb(i, t):
+                mb = t.shape[0] // m
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+
+            def acc_step(carry, i):
+                g_acc, l_acc, a_acc = carry
+                mb = {k: slice_mb(i, v) for k, v in batch.items()}
+                g, (l, a) = jax.grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros(()), jnp.zeros(())), jnp.arange(m)
+            )
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss, aux = loss / m, aux / m
+        params, opt_state, om = opt_mod.adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "aux": aux, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, act_spec=None):
+    """(params, batch) -> last-position logits (B, V).
+
+    Flash (online-softmax) attention keeps the 32k prefill working set
+    linear in sequence — patching in sequence space.
+    """
+
+    def prefill_step(params, batch):
+        logits, _ = MD.forward(params, batch, cfg, act_spec=act_spec)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, act_spec=None):
+    """(params, token, cache, pos) -> (next_token, logits, cache).
+
+    One new token against a seq_len KV cache / recurrent state — what the
+    decode_32k / long_500k shapes lower.
+    """
+
+    def serve_step(params, token, cache, pos):
+        logits, cache = MD.decode_step(params, token, cache, pos, cfg, act_spec=act_spec)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+
+    return serve_step
+
+
+def act_spec_for(mesh, global_batch: int):
+    """Batch-over-data activation anchor (None batch dim when B=1)."""
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh_mod.batch_axes(mesh)
+    dp = mesh_mod.axis_size(mesh, axes)
+    b = (axes if len(axes) > 1 else axes[0]) if global_batch % dp == 0 else None
+    return P(b, None, None)
+
+
+def build_step(cfg: ModelConfig, mode: str, act_spec=None):
+    if mode == "train":
+        return make_train_step(cfg, act_spec=act_spec)
+    if mode == "prefill":
+        return make_prefill_step(cfg, act_spec=act_spec)
+    if mode == "decode":
+        return make_serve_step(cfg, act_spec=act_spec)
+    raise ValueError(mode)
+
+
+# ------------------------------------------------------------ input specs ---
+
+
+def _abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: MD.init(jax.random.PRNGKey(0), cfg))
+
+
+def _abstract_opt(params_shapes):
+    return jax.eval_shape(
+        lambda p: opt_mod.adamw_init(p, OPT_CONFIG), params_shapes
+    )
+
+
+def _batch_shapes(cfg: ModelConfig, mode: str, batch: int, seq: int) -> dict:
+    shapes: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.kind == "encdec":
+        # seq budget belongs to the decoder; encoder sees the stub frames
+        shapes["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "vision_stub":
+        shapes["patches"] = jax.ShapeDtypeStruct((batch, cfg.num_patches, cfg.d_model), cfg.dtype)
+    shapes["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if mode == "train":
+        shapes["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return shapes
+
+
+def input_specs(
+    arch: str, shape_name: str, mesh, cfg_override: ModelConfig | None = None
+) -> tuple[ModelConfig, str, tuple]:
+    """-> (cfg, mode, args) where args are sharded ShapeDtypeStructs for
+    build_step(cfg, mode). ``cfg_override`` substitutes a modified config
+    (the dry-run census uses reduced-repeat variants)."""
+    cfg = cfg_override if cfg_override is not None else configs.for_shape(arch, shape_name)
+    seq, global_batch, mode = configs.INPUT_SHAPES[shape_name]
+
+    pshapes = _abstract_params(cfg)
+    pspecs = sharding.param_specs(pshapes, mesh)
+    params = sharding.with_sharding(pshapes, pspecs, mesh)
+
+    if mode == "train":
+        oshapes = _abstract_opt(pshapes)
+        ospecs = sharding.opt_specs(oshapes, pspecs)
+        opt = sharding.with_sharding(oshapes, ospecs, mesh)
+        bshapes = _batch_shapes(cfg, mode, global_batch, seq)
+        bspecs = sharding.batch_specs(
+            {k: v.shape for k, v in bshapes.items()}, mesh, global_batch
+        )
+        batch = sharding.with_sharding(bshapes, bspecs, mesh)
+        return cfg, mode, (params, opt, batch)
+
+    if mode == "prefill":
+        bshapes = _batch_shapes(cfg, mode, global_batch, seq)
+        bspecs = sharding.batch_specs(
+            {k: v.shape for k, v in bshapes.items()}, mesh, global_batch
+        )
+        batch = sharding.with_sharding(bshapes, bspecs, mesh)
+        return cfg, mode, (params, batch)
+
+    # decode: one token + a seq_len cache
+    cshapes = jax.eval_shape(lambda: MD.init_cache(cfg, global_batch, seq))
+    cspecs = sharding.cache_specs(cshapes, mesh, global_batch)
+    cache = sharding.with_sharding(cshapes, cspecs, mesh)
+    baxes = mesh_mod.batch_axes(mesh)
+    dp = mesh_mod.axis_size(mesh, baxes)
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) if global_batch % dp == 0 else None
+    token = jax.ShapeDtypeStruct(
+        (global_batch, 1),
+        jnp.int32,
+        sharding=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(bspec, None)),
+    )
+    pos = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    )
+    return cfg, mode, (params, token, cache, pos)
+
+
+def donate_argnums(mode: str) -> tuple[int, ...]:
+    """Buffer donation (the paper's 'strategic disposal'): train donates
+    params+opt, decode donates the cache."""
+    return {"train": (0, 1), "prefill": (), "decode": (2,)}[mode]

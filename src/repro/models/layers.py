@@ -1,0 +1,401 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (full / sliding /
+blockwise-streamed / cached-decode), dense & MoE MLPs.
+
+All functions are pure; params are dicts created by the matching init_*.
+Memory discipline: long sequences use blockwise (online-softmax) attention —
+the sequence-space analogue of the paper's sub-volume patching (DESIGN.md
+§4): split the iteration space, keep the working set bounded, merge with an
+exact (rescaled) reduction instead of an overlap halo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# ------------------------------------------------------------------ norms ---
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# ------------------------------------------------------------------- RoPE ---
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention ---
+
+
+def _winit(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) == 2 else int(np.prod(shape[:-1]))
+    std = scale if scale is not None else (1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    q_out, kv_out = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _winit(ks[0], (d, q_out), cfg.dtype),
+        "wk": _winit(ks[1], (d, kv_out), cfg.dtype),
+        "wv": _winit(ks[2], (d, kv_out), cfg.dtype),
+        "wo": _winit(ks[3], (q_out, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((q_out,), cfg.dtype)
+        p["bk"] = jnp.zeros((kv_out,), cfg.dtype)
+        p["bv"] = jnp.zeros((kv_out,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, cfg.dtype)
+        p["k_norm"] = init_rmsnorm(hd, cfg.dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating each kv head."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+def sdpa(q, k, v, *, causal: bool, sliding_window: int | None = None,
+         q_offset: int = 0) -> jax.Array:
+    """Naive attention. q: (B, Tq, H, hd), k/v: (B, Tk, H, hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(hd)
+    tq, tk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(tq) + q_offset
+    kpos = jnp.arange(tk)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if sliding_window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - sliding_window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def blockwise_sdpa(q, k, v, *, causal: bool, sliding_window: int | None = None,
+                   q_block: int = 512, k_block: int = 1024) -> jax.Array:
+    """Online-softmax attention: O(T) memory, exact. Streams KV blocks per
+    Q block with running (max, denom) — 'patching' in sequence space."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    q_pad = (-Tq) % q_block
+    k_pad = (-Tk) % k_block
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // k_block
+    qb = qp.reshape(B, nq, q_block, H, hd)
+    kb = kp.reshape(B, nk, k_block, H, hd)
+    vb = vp.reshape(B, nk, k_block, H, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    def one_q_block(qi, qblk):
+        # qblk: (B, q_block, H, hd)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inp):
+            acc, m, denom = carry
+            ki, kblk, vblk = inp
+            kpos = ki * k_block + jnp.arange(k_block)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+            mask = kpos[None, :] < Tk  # mask K padding
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if sliding_window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - sliding_window
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            denom = denom * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+            )
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, H, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, H, q_block), -jnp.inf, jnp.float32)
+        d0 = jnp.zeros((B, H, q_block), jnp.float32)
+        inds = jnp.arange(nk)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0), (inds, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0))
+        )
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, q_block, H, hd)
+
+    outs = jax.lax.map(
+        lambda i: one_q_block(i, qb[:, i]), jnp.arange(nq)
+    )  # (nq, B, q_block, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_block, H, hd)
+    return out[:, :Tq]
+
+
+# Threshold above which training/prefill attention switches to blockwise.
+BLOCKWISE_THRESHOLD = 2048
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    if x.shape[1] > BLOCKWISE_THRESHOLD and not cfg.scan_unroll:
+        from repro.models.flash import flash_attention
+
+        out = flash_attention(q, k, v, causal, cfg.sliding_window)
+    else:
+        # Short sequences — and the dry-run census pass (scan_unroll), which
+        # needs loop-free attention so cost_analysis counts the full T^2
+        # FLOPs (flash's internal scans would be costed once, not x trips).
+        out = sdpa(q, k, v, causal=causal, sliding_window=cfg.sliding_window)
+    B, T = x.shape[:2]
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, kv-head) symmetric int8 quantization of (B, T, KV, hd)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    rope: bool = True,
+    cache_ks: jax.Array | None = None,
+    cache_vs: jax.Array | None = None,
+):
+    """One-token decode against a (B, S, KV, hd) cache.
+
+    ``pos`` (scalar int32): current position; the new K/V are written at
+    ``pos % S`` — plain append for full attention (S = max seq), ring-buffer
+    overwrite for sliding-window caches (S = window). With ``cfg.kv_quant``
+    the cache is int8 + per-slot scales (``cache_ks``/``cache_vs``).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg, jnp.full((B, 1), pos), rope=rope)
+    S = cache_k.shape[1]
+    slot = (pos % S).astype(jnp.int32)
+    if cfg.kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, slot, 0, 0))
+        cache_ks = jax.lax.dynamic_update_slice(cache_ks, ks, (0, slot, 0, 0))
+        cache_vs = jax.lax.dynamic_update_slice(cache_vs, vs, (0, slot, 0, 0))
+        kk = cache_k.astype(x.dtype) * cache_ks.astype(x.dtype)
+        vv = cache_v.astype(x.dtype) * cache_vs.astype(x.dtype)
+        kk = _repeat_kv(kk, cfg.num_heads)
+        vv = _repeat_kv(vv, cfg.num_heads)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+        kk = _repeat_kv(cache_k, cfg.num_heads)
+        vv = _repeat_kv(cache_v, cfg.num_heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) / np.sqrt(hd)
+    kpos = jnp.arange(S)
+    if cfg.sliding_window is not None and S == cfg.sliding_window:
+        # Ring buffer: every resident slot is within the window once pos >= S;
+        # before that, mask slots beyond the current position.
+        valid = kpos <= jnp.minimum(pos, S - 1)
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    if cfg.kv_quant:
+        return out, cache_k, cache_v, cache_ks, cache_vs
+    return out, cache_k, cache_v
+
+
+# ------------------------------------------------------------------- MLPs ---
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": _winit(ks[0], (d, f), cfg.dtype),
+            "w_up": _winit(ks[1], (d, f), cfg.dtype),
+            "w_down": _winit(ks[2], (f, d), cfg.dtype),
+        }
+    return {
+        "w_up": _winit(ks[0], (d, f), cfg.dtype),
+        "b_up": jnp.zeros((f,), cfg.dtype),
+        "w_down": _winit(ks[1], (f, d), cfg.dtype),
+        "b_down": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])) @ p["w_down"]
+    return (jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)) @ p["w_down"] + p["b_down"]
+
+
+# -------------------------------------------------------------------- MoE ---
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    n_in = 2 if cfg.mlp in ("swiglu", "geglu") else 1
+    p = {
+        "router": _winit(ks[0], (d, e), jnp.float32),  # router in f32
+        "w_up": _winit(ks[1], (e, d, n_in * f), cfg.dtype),
+        "w_down": _winit(ks[2], (e, f, d), cfg.dtype),
+    }
+    return p
+
+
+def moe(
+    p: dict, x: jax.Array, cfg: ModelConfig, capacity_factor: float | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed MoE MLP -> (out, aux_loss).
+
+    Capacity-based sort dispatch with *per-sequence routing groups*: each
+    sequence routes its own tokens into per-expert capacity slots
+    (C = ceil(top_k * T / E * cf)), so the routing (argsort + scatter) stays
+    local to the 'data'-sharded batch axis — no cross-device communication
+    for dispatch, and expert FLOPs are proportional to *activated* params
+    (unlike a dense all-experts einsum, which would inflate HLO_FLOPs by
+    E/top_k — 48x for kimi-k2). Overflowing tokens are dropped (standard
+    GShard semantics); the combine weight renormalizes over kept choices.
+    """
+    B, T, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cf = cfg.moe_capacity_factor if capacity_factor is None else capacity_factor
+    C = max(1, int(np.ceil(k * T / e * cf)))
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (B, T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    n_in = 2 if cfg.mlp in ("swiglu", "geglu") else 1
+
+    def route_group(xg, ei, wi):
+        # xg: (T, d); ei/wi: (T, k). Choice-major priority: all 1st choices
+        # claim capacity before any 2nd choice (GShard ordering).
+        flat_e = ei.T.reshape(-1)  # (k*T,)
+        flat_w = wi.T.reshape(-1)
+        flat_tok = jnp.tile(jnp.arange(T), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se = flat_e[order]
+        first = jnp.searchsorted(se, se, side="left")
+        rank = jnp.arange(k * T) - first
+        slot = jnp.where(rank < C, se * C + rank, e * C)  # e*C = overflow bin
+        buf = jnp.zeros((e * C + 1, d), x.dtype).at[slot].add(xg[flat_tok[order]])
+        h = buf[:-1].reshape(e, C, d)
+        up = jnp.einsum("ecd,edf->ecf", h, p["w_up"])  # (e, C, n_in*f)
+        if n_in == 2:
+            g, u = jnp.split(up, 2, axis=-1)
+            act = jax.nn.silu(g) if cfg.mlp == "swiglu" else jax.nn.gelu(g, approximate=True)
+            hh = act * u
+        else:
+            hh = jax.nn.gelu(up, approximate=True)
+        down = jnp.einsum("ecf,efd->ecd", hh, p["w_down"]).reshape(e * C, d)
+        down = jnp.concatenate([down, jnp.zeros((1, d), down.dtype)])
+        contrib = down[slot] * flat_w[order][:, None].astype(down.dtype)
+        return jnp.zeros((T, d), x.dtype).at[flat_tok[order]].add(contrib.astype(x.dtype))
+
+    out = jax.vmap(route_group)(x, top_i, top_p)
+
+    # load-balance auxiliary loss (global over the batch)
+    me = jnp.mean(probs.reshape(-1, e), axis=0)
+    disp = jax.nn.one_hot(top_i.reshape(-1, k), e, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(disp, axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,155 @@
+"""Mamba (S6) block — the SSM mixer of Jamba's hybrid stack [arXiv:2403.19887].
+
+Selective state-space layer: in_proj -> (x, z); causal depthwise conv;
+data-dependent (dt, B, C) from x; diagonal SSM recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t;  y_t = C_t h_t + D x_t
+gated by silu(z), out_proj back to d_model.
+
+Memory discipline (DESIGN.md §4): training scans over *chunks* of the
+sequence (chunk the iteration space — the paper's patching idea applied to
+time): the inter-chunk carry is just the (B, d_inner, d_state) state, and
+``jax.checkpoint`` on the chunk body keeps backward residuals at chunk
+boundaries only, so the (B, T, d_inner, d_state) tensor never materializes.
+
+Decode is a single recurrence step against a carried (conv window, h) state
+— O(1) in context length, which is why Jamba runs the long_500k shape
+natively (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _winit
+
+CHUNK = 128  # time-chunk for the training scan
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, din, ds, dc = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    dt_rank = max(1, d // 16)
+    # S4D-real initialization of A (negative reals), kept in log space.
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "w_in": _winit(ks[0], (d, 2 * din), cfg.dtype),
+        "conv_w": _winit(ks[1], (dc, din), cfg.dtype),  # depthwise causal conv
+        "conv_b": jnp.zeros((din,), cfg.dtype),
+        "w_bcdt": _winit(ks[2], (din, 2 * ds + dt_rank), cfg.dtype),
+        "w_dt": _winit(ks[3], (dt_rank, din), cfg.dtype),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((din,), 0.01))).astype(jnp.float32),
+        "log_a": jnp.log(a),  # (din, ds) f32
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "w_out": _winit(ks[4], (din, d), cfg.dtype),
+    }
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along T. x: (B, T, din); w: (dc, din)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(dc))
+    return out + b
+
+
+def _ssm_scan(u, dt, bb, cc, log_a, d_skip, h0):
+    """Chunked diagonal SSM scan.
+
+    u: (B, T, din); dt: (B, T, din); bb/cc: (B, T, ds); h0: (B, din, ds).
+    Returns (y (B, T, din), hT).
+    """
+    B, T, din = u.shape
+    ds = bb.shape[-1]
+    a = -jnp.exp(log_a)  # (din, ds) negative reals
+
+    def chunk_body(h, args):
+        uc, dtc, bc, ccc = args  # (B, Tc, ...)
+
+        def step(h, ins):
+            ut, dtt, bt, ct = ins  # (B, din), (B, din), (B, ds), (B, ds)
+            da = jnp.exp(dtt[..., None] * a)  # (B, din, ds)
+            h = da * h + (dtt * ut)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bds,bs->bd", h, ct)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step,
+            h,
+            (
+                jnp.moveaxis(uc, 1, 0),
+                jnp.moveaxis(dtc, 1, 0),
+                jnp.moveaxis(bc, 1, 0),
+                jnp.moveaxis(ccc, 1, 0),
+            ),
+        )
+        return h, jnp.moveaxis(ys, 0, 1)  # (B, Tc, din)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    if T % CHUNK == 0 and T > CHUNK:
+        nc = T // CHUNK
+        args = tuple(
+            jnp.moveaxis(t.reshape(B, nc, CHUNK, *t.shape[2:]), 1, 0)
+            for t in (u, dt, bb, cc)
+        )
+        hT, ys = jax.lax.scan(lambda h, a_: chunk_body(h, a_), h0, args)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, din)
+    else:
+        hT, y = chunk_body(h0, (u, dt, bb, cc))
+    y = y + u * d_skip
+    return y, hT
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence forward (training / prefill). x: (B, T, d)."""
+    B, T, _ = x.shape
+    din, ds = cfg.d_inner, cfg.mamba_d_state
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    bcdt = xi @ p["w_bcdt"]
+    bb = bcdt[..., :ds].astype(jnp.float32)
+    cc = bcdt[..., ds : 2 * ds].astype(jnp.float32)
+    dt_in = bcdt[..., 2 * ds :]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32) + p["b_dt"])
+    h0 = jnp.zeros((B, din, ds), jnp.float32)
+    y, _ = _ssm_scan(xi.astype(jnp.float32), dt, bb, cc, p["log_a"], p["d_skip"], h0)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    """Decode-time carried state: conv tail + SSM state."""
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), cfg.dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), dtype),
+    }
+
+
+def mamba_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, d) -> (out (B, 1, d), new state)."""
+    B = x.shape[0]
+    ds = cfg.mamba_d_state
+    xz = x[:, 0] @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # (B, dc, din)
+    conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xi = jax.nn.silu(conv)
+    bcdt = xi @ p["w_bcdt"]
+    bb = bcdt[..., :ds].astype(jnp.float32)
+    cc = bcdt[..., ds : 2 * ds].astype(jnp.float32)
+    dt_in = bcdt[..., 2 * ds :]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32) + p["b_dt"])
+    a = -jnp.exp(p["log_a"])
+    da = jnp.exp(dt[..., None] * a)
+    h = da * state["h"] + (dt * xi.astype(jnp.float32))[..., None] * bb[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cc) + xi.astype(jnp.float32) * p["d_skip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    new_state = {"conv": window[:, 1:], "h": h}
+    return out[:, None], new_state

@@ -1,0 +1,405 @@
+"""Unified LM assembly for the architecture zoo.
+
+Families share one skeleton: embeddings -> lax.scan over repeats of the
+config's block *pattern* (DESIGN.md §4) -> final norm -> unembed. Block
+kinds: attention / mamba / rwkv mixers, dense or MoE MLPs, plus cross-
+attention for the enc-dec (whisper) family and prefix-embedding frontends
+for VLM/audio stubs.
+
+Three entry points per family (what the dry-run lowers):
+  forward(params, batch, cfg)                  -> (logits, aux) training/prefill
+  init_cache(cfg, batch, max_seq)              -> decode cache pytree
+  decode_step(params, token, cache, pos, cfg)  -> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv6 as R
+from repro.models.config import ModelConfig
+
+# ----------------------------------------------------------------- blocks ---
+
+
+def _init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    mixer = kind.split("_")[0]
+    p: dict[str, Any] = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    elif mixer == "rwkv":
+        p = {"ln1": L.init_layernorm(cfg.d_model, cfg.dtype)}
+        p["tmix"] = R.init_rwkv(ks[0], cfg)
+        p["ln2"] = L.init_layernorm(cfg.d_model, cfg.dtype)
+        p["cmix"] = R.init_rwkv_cmix(ks[1], cfg)
+        return p
+    if cfg.kind == "encdec" and mixer == "attn":
+        p["ln_cross"] = L.init_layernorm(cfg.d_model, cfg.dtype)
+        p["cross"] = L.init_attention(ks[2], cfg)
+        p["ln1"] = L.init_layernorm(cfg.d_model, cfg.dtype)
+        p["ln2"] = L.init_layernorm(cfg.d_model, cfg.dtype)
+    else:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    if kind.endswith("_moe"):
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _apply_mlp_part(bp: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    h = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+    if "moe" in bp:
+        out, aux = L.moe(bp["moe"], h, cfg)
+    else:
+        out, aux = L.mlp(bp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def _apply_block(
+    bp: dict,
+    kind: str,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    enc: jax.Array | None = None,
+    causal: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    mixer = kind.split("_")[0]
+    h = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        rope = cfg.kind != "encdec"  # whisper uses absolute (sinusoidal) pos
+        x = x + L.attention(bp["attn"], h, cfg, positions, causal=causal, rope=rope)
+        if "cross" in bp and enc is not None:
+            h2 = L.apply_norm(bp["ln_cross"], x, cfg.norm_eps)
+            x = x + _cross_attention(bp["cross"], h2, enc, cfg)
+    elif mixer == "mamba":
+        x = x + M.mamba_forward(bp["mamba"], h, cfg)
+    elif mixer == "rwkv":
+        x = x + R.rwkv_time_mix(bp["tmix"], h, cfg)
+        h2 = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+        return x + R.rwkv_channel_mix(bp["cmix"], h2), jnp.zeros((), jnp.float32)
+    return _apply_mlp_part(bp, x, cfg)
+
+
+def _cross_attention(p: dict, x: jax.Array, enc: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, T, cfg.num_heads, hd)
+    k = (enc @ p["wk"]).reshape(B, enc.shape[1], cfg.num_kv_heads, hd)
+    v = (enc @ p["wv"]).reshape(B, enc.shape[1], cfg.num_kv_heads, hd)
+    k = L._repeat_kv(k, cfg.num_heads)
+    v = L._repeat_kv(v, cfg.num_heads)
+    out = L.sdpa(q, k, v, causal=False)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+# ------------------------------------------------------------------- init ---
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    pattern = cfg.block_pattern()
+    reps = cfg.num_repeats
+    ks = jax.random.split(key, len(pattern) + 4)
+    blocks = []
+    for pi, kind in enumerate(pattern):
+        layer_keys = jax.random.split(ks[pi], reps)
+        blocks.append(jax.vmap(lambda k, kind=kind: _init_block(k, kind, cfg))(layer_keys))
+    params: dict[str, Any] = {
+        "embed": L._winit(ks[-1], (cfg.vocab_size, cfg.d_model), cfg.dtype, scale=0.02),
+        "final_norm": (
+            L.init_layernorm(cfg.d_model, cfg.dtype)
+            if cfg.kind == "encdec"
+            else L.init_rmsnorm(cfg.d_model, cfg.dtype)
+        ),
+        "blocks": tuple(blocks),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._winit(ks[-2], (cfg.d_model, cfg.vocab_size), cfg.dtype)
+    if cfg.frontend is not None:
+        params["projector"] = L._winit(ks[-3], (cfg.d_model, cfg.d_model), cfg.dtype)
+    if cfg.encoder_layers:
+        enc_cfg = cfg  # same widths; bidirectional attention, dense MLP
+        enc_keys = jax.random.split(ks[-4], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_encoder_block(k, enc_cfg))(enc_keys),
+            "final_norm": L.init_layernorm(cfg.d_model, cfg.dtype),
+        }
+    return params
+
+
+def _init_encoder_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_layernorm(cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+# ------------------------------------------------------------ positional ----
+
+
+def sinusoidal(positions: jax.Array, d: int, dtype) -> jax.Array:
+    """Whisper-style sinusoidal embeddings for arbitrary positions."""
+    half = d // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------- forward ---
+
+
+def _constrain(x, spec):
+    """Activation sharding anchor (no-op when spec is None)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _scan_blocks(params, cfg: ModelConfig, x, positions, enc=None, causal=True, act_spec=None):
+    pattern = cfg.block_pattern()
+
+    def body(carry, rep_params):
+        h, aux = carry
+        h = _constrain(h, act_spec)
+        for pi, kind in enumerate(pattern):
+            h, a = _apply_block(rep_params[pi], kind, h, cfg, positions, enc, causal)
+            aux = aux + a
+        return (_constrain(h, act_spec), aux), None
+
+    if cfg.remat == "full":
+        # Layer-streaming for training: backward recomputes each repeat, so
+        # only the repeat-boundary activations are saved across the scan.
+        body = jax.checkpoint(body, prevent_cse=False)
+    unroll = cfg.num_repeats if cfg.scan_unroll else 1
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"], unroll=unroll
+    )
+    return x, aux
+
+
+def forward_sharded(params, batch: dict, cfg: ModelConfig, act_spec):
+    """forward() with an activation-sharding anchor (batch over the data
+    axes) applied at the embedding and at every scan repeat — prevents the
+    partitioner from propagating the embedding table's vocab/d sharding
+    into a batch-replicated activation layout."""
+    return forward(params, batch, cfg, act_spec=act_spec)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, act_spec=None) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    x = frames @ params["projector"] if "projector" in params else frames
+    pos = jnp.arange(x.shape[1])
+    x = _constrain(x + sinusoidal(pos, cfg.d_model, x.dtype)[None], act_spec)
+
+    def body(h, bp):
+        a = L.apply_norm(bp["ln1"], h, cfg.norm_eps)
+        h = h + L.attention(bp["attn"], a, cfg, pos, causal=False, rope=False)
+        m = L.apply_norm(bp["ln2"], h, cfg.norm_eps)
+        return _constrain(h + L.mlp(bp["mlp"], m, cfg), act_spec), None
+
+    x, _ = jax.lax.scan(
+        body, x, params["encoder"]["blocks"],
+        unroll=cfg.encoder_layers if cfg.scan_unroll else 1,
+    )
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch: dict, cfg: ModelConfig, act_spec=None) -> tuple[jax.Array, jax.Array]:
+    """Training / prefill forward.
+
+    batch keys by family: tokens (all); patches (vlm, (B,P,d) stub
+    embeddings); frames (audio, (B,S_enc,d) stub embeddings).
+    Returns (logits over the token positions, moe aux loss).
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _constrain(params["embed"][tokens], act_spec)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    prefix = 0
+    enc = None
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"] @ params["projector"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        x = _constrain(x, act_spec)
+        prefix = patches.shape[1]
+    if cfg.kind == "encdec":
+        enc = encode(params, batch["frames"], cfg, act_spec=act_spec)
+        x = x + sinusoidal(jnp.arange(T), cfg.d_model, x.dtype)[None]
+    positions = jnp.arange(x.shape[1])
+    x, aux = _scan_blocks(params, cfg, x, positions, enc=enc, causal=True, act_spec=act_spec)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    logits = unembed(params, x, cfg)
+    return logits, aux
+
+
+def unembed(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ----------------------------------------------------------------- decode ---
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, enc_out: jax.Array | None = None):
+    """Decode cache pytree, stacked over repeats per pattern position.
+
+    For attention positions: (R, B, S, KV, hd) K/V rings (S = sliding window
+    if set, else max_seq). Mamba/RWKV positions carry O(1) recurrent state.
+    """
+    pattern = cfg.block_pattern()
+    reps = cfg.num_repeats
+    hd = cfg.resolved_head_dim
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+
+    def stack(make):
+        one = make()
+        return jax.tree.map(lambda l: jnp.broadcast_to(l, (reps,) + l.shape), one)
+
+    caches = []
+    for kind in pattern:
+        mixer = kind.split("_")[0]
+        if mixer == "attn":
+            if cfg.kv_quant:
+                entry = stack(
+                    lambda: {
+                        "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), jnp.int8),
+                        "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), jnp.int8),
+                        "ks": jnp.zeros((batch, S, cfg.num_kv_heads, 1), jnp.float32),
+                        "vs": jnp.zeros((batch, S, cfg.num_kv_heads, 1), jnp.float32),
+                    }
+                )
+            else:
+                entry = stack(
+                    lambda: {
+                        "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), cfg.dtype),
+                        "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), cfg.dtype),
+                    }
+                )
+            if cfg.kind == "encdec":
+                assert enc_out is not None or True
+                Se = cfg.encoder_seq
+                entry["ek"] = jnp.zeros((reps, batch, Se, cfg.num_kv_heads, hd), cfg.dtype)
+                entry["ev"] = jnp.zeros((reps, batch, Se, cfg.num_kv_heads, hd), cfg.dtype)
+            caches.append(entry)
+        elif mixer == "mamba":
+            caches.append(stack(lambda: M.init_mamba_state(cfg, batch)))
+        else:  # rwkv
+            caches.append(
+                stack(
+                    lambda: dict(
+                        R.init_rwkv_state(cfg, batch),
+                        last_c=jnp.zeros((batch, 1, cfg.d_model), cfg.dtype),
+                    )
+                )
+            )
+    return tuple(caches)
+
+
+def fill_cross_cache(params, cache, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output into the cache."""
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def per_rep(bp):
+        k = (enc_out @ bp["cross"]["wk"]).reshape(B, Se, cfg.num_kv_heads, hd)
+        v = (enc_out @ bp["cross"]["wv"]).reshape(B, Se, cfg.num_kv_heads, hd)
+        return k, v
+
+    new_cache = []
+    for pi, entry in enumerate(cache):
+        if "ek" in entry:
+            ks, vs = jax.vmap(per_rep)(jax.tree.map(lambda a: a, params["blocks"][pi]))
+            entry = dict(entry, ek=ks.astype(entry["ek"].dtype), ev=vs.astype(entry["ev"].dtype))
+        new_cache.append(entry)
+    return tuple(new_cache)
+
+
+def _decode_block(bp, kind, x, state, pos, cfg: ModelConfig):
+    mixer = kind.split("_")[0]
+    h = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        if cfg.kv_quant:
+            out, ck, cv, cks, cvs = L.attention_decode(
+                bp["attn"], h, cfg, state["k"], state["v"], pos,
+                rope=cfg.kind != "encdec", cache_ks=state["ks"], cache_vs=state["vs"],
+            )
+            state = dict(state, k=ck, v=cv, ks=cks, vs=cvs)
+        else:
+            out, ck, cv = L.attention_decode(
+                bp["attn"], h, cfg, state["k"], state["v"], pos, rope=cfg.kind != "encdec"
+            )
+            state = dict(state, k=ck, v=cv)
+        x = x + out
+        if "cross" in bp:
+            h2 = L.apply_norm(bp["ln_cross"], x, cfg.norm_eps)
+            x = x + _cross_attention_cached(bp["cross"], h2, state["ek"], state["ev"], cfg)
+    elif mixer == "mamba":
+        out, state = M.mamba_decode(bp["mamba"], h, state, cfg)
+        x = x + out
+    else:  # rwkv
+        out, tstate = R.rwkv_decode(bp["tmix"], h, {"last": state["last"], "s": state["s"]}, cfg)
+        x = x + out
+        h2 = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+        out2, new_last_c = R.rwkv_channel_mix_decode(bp["cmix"], h2, state["last_c"])
+        x = x + out2
+        return x, {"last": tstate["last"], "s": tstate["s"], "last_c": new_last_c}
+    x, _ = _apply_mlp_part(bp, x, cfg)
+    return x, state
+
+
+def _cross_attention_cached(p, x, ek, ev, cfg: ModelConfig):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, T, cfg.num_heads, hd)
+    k = L._repeat_kv(ek, cfg.num_heads)
+    v = L._repeat_kv(ev, cfg.num_heads)
+    out = L.sdpa(q, k, v, causal=False)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def decode_step(params, token: jax.Array, cache, pos: jax.Array, cfg: ModelConfig, act_spec=None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current
+    sequence position). Returns (logits (B, 1, V), new cache)."""
+    x = _constrain(params["embed"][token], act_spec)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.kind == "encdec":
+        x = x + sinusoidal(pos[None], cfg.d_model, x.dtype)[None]
+    pattern = cfg.block_pattern()
+
+    def body(carry, rep):
+        h = _constrain(carry, act_spec)
+        rep_params, rep_cache = rep
+        new_states = []
+        for pi, kind in enumerate(pattern):
+            h, st = _decode_block(rep_params[pi], kind, h, rep_cache[pi], pos, cfg)
+            new_states.append(st)
+        return h, tuple(new_states)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["blocks"], cache),
+        unroll=cfg.num_repeats if cfg.scan_unroll else 1,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params, x, cfg), new_cache

@@ -1,0 +1,77 @@
+"""Telemetry records — the schema of the paper's Tables III/IV.
+
+Brainchop collects anonymized per-run telemetry (stage timings, model,
+status, failure type). We keep the same columns so the analysis code in
+telemetry/analysis.py can regenerate the paper's contingency tables from
+simulated runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StageTimes:
+    """Per-stage wall times in seconds (Table IV columns)."""
+
+    preprocessing: float = 0.0
+    cropping: float = 0.0
+    inference: float = 0.0
+    merging: float = 0.0
+    postprocessing: float = 0.0
+
+    def total(self) -> float:
+        return (
+            self.preprocessing
+            + self.cropping
+            + self.inference
+            + self.merging
+            + self.postprocessing
+        )
+
+
+@dataclasses.dataclass
+class TelemetryRecord:
+    model: str
+    mode: str  # full | subvolume | streaming
+    status: str  # ok | fail
+    times: StageTimes
+    fail_type: Optional[str] = None
+    crop_size: Optional[tuple] = None
+    # device context (the simulator's stand-ins for GPU card / texture size)
+    memory_budget_bytes: Optional[int] = None
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d)
+
+
+class TelemetryLog:
+    """Append-only JSONL log + in-memory list (the 1336-sample dataset
+    analogue)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.records: list[TelemetryRecord] = []
+
+    def append(self, rec: TelemetryRecord) -> None:
+        self.records.append(rec)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(rec.to_json() + "\n")
+
+    def success_rate(self) -> float:
+        if not self.records:
+            return 0.0
+        ok = sum(1 for r in self.records if r.status == "ok")
+        return ok / len(self.records)
+
+    def by(self, key) -> dict:
+        out: dict = {}
+        for r in self.records:
+            out.setdefault(key(r), []).append(r)
+        return out

@@ -1,0 +1,143 @@
+"""Checkpointing — flat-key .npz shards + JSON manifest.
+
+No orbax in this container, so we implement the substrate: a pytree is
+flattened to path-keyed arrays, split into bounded-size shards, written
+atomically (tmp + rename) with a manifest carrying step/metadata and the
+treedef. Restore rebuilds the exact pytree (dtypes/shapes checked) and
+supports partial loads (e.g. params only, skip optimizer state).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                visit(f"{prefix}{_SEP}{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                visit(f"{prefix}{_SEP}{i}" if prefix else str(i), v)
+            if hasattr(node, "_fields"):  # NamedTuple: remember the type name
+                pass
+        else:
+            flat[prefix] = np.asarray(node)
+
+    visit("", tree)
+    return flat
+
+
+def _treedef_spec(tree) -> Any:
+    """JSON-able structure spec mirroring _flatten's traversal."""
+    if isinstance(tree, dict):
+        return {"__kind__": "dict", "keys": {k: _treedef_spec(v) for k, v in sorted(tree.items())}}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return {
+            "__kind__": "namedtuple",
+            "name": type(tree).__name__,
+            "fields": [[f, _treedef_spec(getattr(tree, f))] for f in tree._fields],
+        }
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_treedef_spec(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def save(path: str, tree, *, step: int | None = None, metadata: dict | None = None,
+         shard_bytes: int = 1 << 30) -> None:
+    """Write checkpoint dir: manifest.json + shard_*.npz (atomic)."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    # Pack into shards under shard_bytes each.
+    shards: list[dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    for k, v in flat.items():
+        if sizes[-1] + v.nbytes > shard_bytes and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+        shards[-1][k] = v
+        sizes[-1] += v.nbytes
+    index = {}
+    for i, shard in enumerate(shards):
+        fname = f"shard_{i:05d}.npz"
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".npz")
+        os.close(fd)
+        np.savez(tmp, **{k.replace("/", "|"): v for k, v in shard.items()})
+        os.replace(tmp, os.path.join(path, fname))
+        for k in shard:
+            index[k] = fname
+    manifest = {
+        "step": step,
+        "metadata": metadata or {},
+        "index": index,
+        "spec": _treedef_spec(tree),
+        "num_shards": len(shards),
+    }
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def _unflatten(spec, flat: dict[str, np.ndarray], prefix: str = ""):
+    kind = spec["__kind__"]
+    if kind == "leaf":
+        return jax.numpy.asarray(flat[prefix])
+    if kind == "dict":
+        return {
+            k: _unflatten(s, flat, f"{prefix}{_SEP}{k}" if prefix else str(k))
+            for k, s in spec["keys"].items()
+        }
+    if kind in ("list", "tuple"):
+        items = [
+            _unflatten(s, flat, f"{prefix}{_SEP}{i}" if prefix else str(i))
+            for i, s in enumerate(spec["items"])
+        ]
+        return items if kind == "list" else tuple(items)
+    if kind == "namedtuple":
+        vals = {
+            f: _unflatten(s, flat, f"{prefix}{_SEP}{i}" if prefix else str(i))
+            for i, (f, s) in enumerate(spec["fields"])
+        }
+        # Rebuild as a plain namedtuple-compatible dict if the class is not
+        # importable; AdamWState/SGDState callers re-wrap via from_dict.
+        from repro.training import optimizer as _opt
+
+        cls = getattr(_opt, spec["name"], None)
+        return cls(**vals) if cls else vals
+    raise ValueError(f"bad spec kind {kind}")
+
+
+def restore(path: str) -> tuple[Any, dict]:
+    """-> (tree, manifest). Raises FileNotFoundError if absent."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat: dict[str, np.ndarray] = {}
+    for i in range(manifest["num_shards"]):
+        with np.load(os.path.join(path, f"shard_{i:05d}.npz")) as z:
+            for k in z.files:
+                flat[k.replace("|", "/")] = z[k]
+    tree = _unflatten(manifest["spec"], flat)
+    return tree, manifest
+
+
+def latest_step_dir(root: str) -> str | None:
+    """Find the newest step_NNNN dir under root (train.py resume helper)."""
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    return os.path.join(root, max(steps, key=lambda s: int(s.split("_")[1])))

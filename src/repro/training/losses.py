@@ -1,0 +1,79 @@
+"""Training losses & metrics — §III-B of the paper: Dice + CrossEntropy.
+
+The paper trains MeshNet with cross-entropy loss and tracks macro Dice
+computed from binary masks per label. We provide both, plus a combined
+loss (CE + soft-Dice) commonly used for the class-imbalanced GWM task.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def one_hot(labels: jax.Array, num_classes: int, dtype=jnp.float32) -> jax.Array:
+    return jax.nn.one_hot(labels, num_classes, dtype=dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all voxels/tokens. logits (..., C), labels (...) int."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(ll)
+
+
+def dice_score(pred: jax.Array, truth: jax.Array, num_classes: int, eps: float = 1e-7) -> jax.Array:
+    """Macro Dice over classes from *hard* labels (eq. 2 of the paper).
+
+    DICE_c = 2|X_c ∩ Y_c| / (|X_c| + |Y_c|); classes absent from both
+    pred and truth score 1 (they are perfectly segmented as empty).
+    """
+    scores = []
+    for c in range(num_classes):
+        x = pred == c
+        y = truth == c
+        inter = jnp.sum(x & y)
+        denom = jnp.sum(x) + jnp.sum(y)
+        scores.append(jnp.where(denom == 0, 1.0, 2.0 * inter / (denom + eps)))
+    return jnp.mean(jnp.stack(scores))
+
+
+def soft_dice_loss(logits: jax.Array, labels: jax.Array, num_classes: int, eps: float = 1e-7) -> jax.Array:
+    """Differentiable (soft) macro Dice loss: 1 - mean_c dice(p_c, y_c)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    y = one_hot(labels, num_classes, probs.dtype)
+    axes = tuple(range(probs.ndim - 1))
+    inter = jnp.sum(probs * y, axis=axes)
+    denom = jnp.sum(probs, axis=axes) + jnp.sum(y, axis=axes)
+    dice = (2.0 * inter + eps) / (denom + eps)
+    return 1.0 - jnp.mean(dice)
+
+
+def segmentation_loss(
+    logits: jax.Array,
+    labels: jax.Array,
+    num_classes: int,
+    dice_weight: float = 1.0,
+) -> tuple[jax.Array, dict]:
+    """CE + dice_weight * soft-Dice; returns (loss, metrics dict)."""
+    ce = cross_entropy(logits, labels)
+    sd = soft_dice_loss(logits, labels, num_classes)
+    loss = ce + dice_weight * sd
+    hard = jnp.argmax(logits, axis=-1)
+    return loss, {
+        "ce": ce,
+        "soft_dice_loss": sd,
+        "dice": dice_score(hard, labels, num_classes),
+    }
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Token-level CE for the architecture zoo's train_step.
+
+    logits (B, T, V), labels (B, T); mask optional (B, T) weights.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,146 @@
+"""Optimizers + LR schedules, pure JAX pytree implementations.
+
+AdamW (used for both MeshNet training and the architecture-zoo train_step
+lowered in the dry-run), SGD+momentum, cosine/warmup schedules, global-norm
+clipping. State is a pytree matching params, so it shards with the same
+PartitionSpecs (optimizer-state sharding = FSDP-style when params are
+sharded over 'data').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: float | None = 1.0
+    schedule: Callable[[jax.Array], jax.Array] | None = None
+    # dtype of the first/second-moment accumulators (f32 master states)
+    state_dtype: Any = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """One AdamW step -> (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+    metrics["lr"] = lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(cfg.state_dtype)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(cfg.state_dtype)
+        return (p.astype(cfg.state_dtype) - lr * delta).astype(p.dtype), m, v
+
+    # Flatten/unflatten (not tuple-packed tree.map): param trees may contain
+    # tuple nodes, which would confuse an is_leaf=tuple trick.
+    g_leaves, treedef = jax.tree.flatten(grads)
+    m_leaves = treedef.flatten_up_to(state.mu)
+    v_leaves = treedef.flatten_up_to(state.nu)
+    p_leaves = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    schedule: Callable[[jax.Array], jax.Array] | None = None
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    velocity: Any
+
+
+def sgd_init(params, cfg: SGDConfig) -> SGDState:
+    return SGDState(
+        step=jnp.zeros((), jnp.int32),
+        velocity=jax.tree.map(jnp.zeros_like, params),
+    )
+
+
+def sgd_update(grads, state: SGDState, params, cfg: SGDConfig):
+    step = state.step + 1
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+
+    def upd(g, v, p):
+        g = g + cfg.weight_decay * p
+        v = cfg.momentum * v + g
+        return p - lr * v, v
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    v_leaves = treedef.flatten_up_to(state.velocity)
+    p_leaves = treedef.flatten_up_to(params)
+    out = [upd(g, v, p) for g, v, p in zip(g_leaves, v_leaves, p_leaves)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, SGDState(step=step, velocity=new_v), {"lr": lr}
+
+
+# --- schedules ---------------------------------------------------------------
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)

@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes, dtypes, dilations and channel widths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import meshnet
+from repro.core.meshnet import MeshNetConfig
+from repro.kernels import dice as dice_kernel
+from repro.kernels import dilated_conv3d as conv_kernel
+from repro.kernels import ops, ref
+from repro.training import losses
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestDilatedConv3D:
+    @pytest.mark.parametrize("dilation", [1, 2, 4, 8, 16])
+    def test_dilation_sweep(self, dilation):
+        x = _rand(KEY, (1, 32, 32, 32, 5), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), jnp.float32) * 0.2
+        b = _rand(jax.random.PRNGKey(2), (5,), jnp.float32) * 0.1
+        out = conv_kernel.dilated_conv3d(x, w, b, dilation=dilation, interpret=True)
+        expect = ref.dilated_conv3d(x, w, b, dilation=dilation)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=5e-5)
+
+    @pytest.mark.parametrize(
+        "cin,cout", [(1, 5), (5, 5), (5, 3), (21, 21), (10, 50)]
+    )
+    def test_channel_sweep(self, cin, cout):
+        x = _rand(KEY, (1, 16, 16, 16, cin), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, cin, cout), jnp.float32) * 0.1
+        b = jnp.zeros((cout,))
+        out = conv_kernel.dilated_conv3d(x, w, b, dilation=2, interpret=True)
+        expect = ref.dilated_conv3d(x, w, b, dilation=2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=5e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        x = _rand(KEY, (1, 16, 16, 16, 5), dtype)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), dtype) * 0.2
+        b = jnp.zeros((5,), dtype)
+        out = conv_kernel.dilated_conv3d(x, w, b, dilation=4, interpret=True)
+        expect = ref.dilated_conv3d(x, w, b, dilation=4)
+        tol = 5e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+        )
+
+    def test_batched(self):
+        x = _rand(KEY, (3, 16, 16, 16, 5), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), jnp.float32) * 0.2
+        b = jnp.zeros((5,))
+        out = conv_kernel.dilated_conv3d(x, w, b, dilation=2, interpret=True)
+        expect = ref.dilated_conv3d(x, w, b, dilation=2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=5e-5)
+
+    def test_fused_affine_relu_epilogue(self):
+        x = _rand(KEY, (1, 16, 16, 16, 5), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), jnp.float32) * 0.2
+        b = jnp.zeros((5,))
+        s = jnp.asarray([1.5, 0.5, 2.0, 1.0, 0.1])
+        o = jnp.asarray([0.1, -0.2, 0.0, 0.3, -0.1])
+        out = conv_kernel.dilated_conv3d(
+            x, w, b, dilation=8, scale=s, offset=o, fuse_affine=True, interpret=True
+        )
+        expect = ref.dilated_conv3d(x, w, b, dilation=8, scale=s, offset=o, fuse_affine=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=5e-5)
+        assert float(out.min()) >= 0.0  # ReLU applied
+
+    def test_odd_shapes_via_ops_wrapper(self):
+        x = _rand(KEY, (1, 24, 20, 28, 5), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), jnp.float32) * 0.2
+        b = jnp.zeros((5,))
+        out = ops.dilated_conv3d(x, w, b, dilation=4, interpret=True)
+        expect = ref.dilated_conv3d(x, w, b, dilation=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=5e-5)
+
+    def test_kernel_backed_meshnet_matches_reference_model(self):
+        cfg = MeshNetConfig()
+        p = meshnet.init(KEY, cfg)
+        x = _rand(jax.random.PRNGKey(3), (1, 20, 24, 16), jnp.float32)
+        out = ops.meshnet_apply(p, x, cfg, interpret=True)
+        expect = meshnet.apply(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    def test_vmem_budget(self):
+        # The default block config must stay under a 16 MB VMEM budget.
+        assert conv_kernel.vmem_bytes(16, 5, 5) < 16 * 1024 * 1024
+        assert conv_kernel.vmem_bytes(16, 21, 21) < 16 * 1024 * 1024
+
+
+class TestDecodeAttentionKernel:
+    @pytest.mark.parametrize(
+        "B,H,KV,hd,S,pos,blk",
+        [
+            (2, 8, 2, 32, 100, 57, 32),  # GQA 4x, ragged S, mid pos
+            (1, 4, 4, 16, 64, 63, 64),  # MHA, single block, full cache
+            (3, 16, 8, 64, 200, 10, 48),  # mostly-masked cache
+            (1, 8, 1, 32, 96, 95, 32),  # MQA
+        ],
+    )
+    def test_matches_oracle(self, B, H, KV, hd, S, pos, blk):
+        from repro.kernels.decode_attention import decode_attention
+
+        q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+        out = decode_attention(q, k, v, jnp.asarray(pos, jnp.int32), block_s=blk)
+        expect = ref.decode_attention(q, k, v, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+    def test_bf16(self):
+        from repro.kernels.decode_attention import decode_attention
+
+        mk = lambda key, shape: jax.random.normal(key, shape, jnp.float32).astype(jnp.bfloat16)
+        q = mk(jax.random.PRNGKey(0), (2, 1, 8, 32))
+        k = mk(jax.random.PRNGKey(1), (2, 80, 4, 32))
+        v = mk(jax.random.PRNGKey(2), (2, 80, 4, 32))
+        out = decode_attention(q, k, v, jnp.asarray(40, jnp.int32), block_s=32)
+        expect = ref.decode_attention(q, k, v, 40)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=3e-2
+        )
+
+
+class TestDiceKernel:
+    @pytest.mark.parametrize("shape", [(8, 8, 8), (31, 33, 17), (5, 7, 11)])
+    @pytest.mark.parametrize("classes", [2, 3, 5])
+    def test_counts_match_oracle(self, shape, classes):
+        pred = jax.random.randint(KEY, shape, 0, classes)
+        truth = jax.random.randint(jax.random.PRNGKey(1), shape, 0, classes)
+        counts = dice_kernel.dice_counts(pred, truth, classes, block=64, interpret=True)
+        expect = ref.dice_counts(pred, truth, classes)
+        np.testing.assert_array_equal(np.asarray(counts), np.asarray(expect))
+
+    def test_dice_score_matches_losses(self):
+        pred = jax.random.randint(KEY, (16, 16, 16), 0, 3)
+        truth = jax.random.randint(jax.random.PRNGKey(1), (16, 16, 16), 0, 3)
+        a = float(ops.dice(pred, truth, 3, interpret=True))
+        b = float(losses.dice_score(pred, truth, 3))
+        assert abs(a - b) < 1e-6
+
+    def test_perfect_overlap(self):
+        x = jax.random.randint(KEY, (12, 12, 12), 0, 4)
+        assert float(ops.dice(x, x, 4, interpret=True)) == 1.0

@@ -1,0 +1,264 @@
+"""Architecture-zoo tests: per-arch smoke (reduced config, one forward +
+one train step), decode-vs-forward equivalence, flash attention vs oracle,
+and family-specific invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import layers as L
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.models.flash import flash_attention
+from repro.training import losses
+from repro.training import optimizer as opt_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg: ModelConfig, B=2, T=16, with_labels=False):
+    batch = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(KEY, (B, cfg.num_patches, cfg.d_model), cfg.dtype)
+    if cfg.kind == "encdec":
+        batch["frames"] = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if with_labels:
+        batch["labels"] = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = configs.get_smoke(arch)
+        params = MD.init(KEY, cfg)
+        batch = _batch(cfg)
+        logits, aux = MD.forward(params, batch, cfg)
+        assert logits.shape == (2, 16, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        assert bool(jnp.isfinite(aux))
+
+    def test_one_train_step_reduces_loss_structurally(self, arch):
+        """One AdamW step runs, produces finite loss/grads and changes params."""
+        from repro.launch import steps as steps_mod
+
+        cfg = dataclasses.replace(configs.get_smoke(arch), dtype=jnp.float32)
+        params = MD.init(KEY, cfg)
+        opt_state = opt_mod.adamw_init(params, steps_mod.OPT_CONFIG)
+        step = steps_mod.make_train_step(cfg)
+        batch = _batch(cfg, with_labels=True)
+        new_params, new_opt, metrics = jax.jit(step)(params, opt_state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert int(new_opt.step) == 1
+        # at least one leaf moved
+        moved = any(
+            float(jnp.abs(a - b).max()) > 0
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+        )
+        assert moved
+
+    def test_decode_matches_forward(self, arch):
+        cfg = dataclasses.replace(
+            configs.get_smoke(arch), dtype=jnp.float32, moe_capacity_factor=8.0
+        )
+        params = MD.init(KEY, cfg)
+        B, T = 2, 10
+        batch = _batch(cfg, B=B, T=T)
+        full_logits, _ = MD.forward(params, batch, cfg)
+        cache = MD.init_cache(cfg, B, T)
+        if cfg.kind == "encdec":
+            enc = MD.encode(params, batch["frames"], cfg)
+            cache = MD.fill_cross_cache(params, cache, enc, cfg)
+        if cfg.frontend == "vision_stub":
+            pytest.skip("decode equivalence needs the patch prefix prefilled")
+        errs = []
+        for t in range(T):
+            dl, cache = MD.decode_step(
+                params, batch["tokens"][:, t : t + 1], cache, jnp.asarray(t, jnp.int32), cfg
+            )
+            errs.append(float(jnp.abs(dl[:, 0] - full_logits[:, t]).max()))
+        assert max(errs) < 1e-3, errs
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal,window", [(True, None), (True, 64), (False, None)])
+    def test_forward_matches_naive(self, causal, window):
+        B, T, H, hd = 2, 200, 4, 32
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd))
+        k = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd))
+        v = jax.random.normal(jax.random.PRNGKey(3), (B, T, H, hd))
+        ref = L.sdpa(q, k, v, causal=causal, sliding_window=window)
+        out = flash_attention(q, k, v, causal, window, 64, 96)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+    def test_gradients_match_naive(self):
+        B, T, H, hd = 1, 130, 2, 16
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd))
+        k = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd))
+        v = jax.random.normal(jax.random.PRNGKey(3), (B, T, H, hd))
+        f_ref = lambda *a: (L.sdpa(*a, causal=True) ** 2).sum()
+        f_fl = lambda *a: (flash_attention(*a, True, None, 32, 64).astype(jnp.float32) ** 2).sum()
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        gf = jax.grad(f_fl, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gr, gf):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+    def test_rectangular_kv(self):
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 50, 2, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 170, 2, 16))
+        v = jax.random.normal(jax.random.PRNGKey(3), (1, 170, 2, 16))
+        ref = L.sdpa(q, k, v, causal=False)
+        out = flash_attention(q, k, v, False, None, 32, 64)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+
+class TestFamilyInvariants:
+    def test_gqa_repeat_kv(self):
+        k = jax.random.normal(KEY, (2, 8, 2, 16))
+        out = L._repeat_kv(k, 8)
+        assert out.shape == (2, 8, 8, 16)
+        np.testing.assert_array_equal(np.asarray(out[:, :, 0]), np.asarray(out[:, :, 3]))
+
+    def test_rope_relative_position_property(self):
+        """RoPE: <q_i, k_j> depends only on i - j."""
+        hd = 32
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+        def dot_at(qi, kj):
+            qr = L.apply_rope(q, jnp.asarray([qi]), 10_000.0)
+            kr = L.apply_rope(k, jnp.asarray([kj]), 10_000.0)
+            return float(jnp.sum(qr * kr))
+        assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-4
+        assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6  # but not position-free
+
+    def test_moe_aux_loss_balanced_routing(self):
+        """With uniform router probs the load-balance loss sits at its
+        minimum, top_k (Σ_e me·ce·E = E·(1/E)·k); a collapsed router that
+        sends everything to expert 0 scores ~ E·k·(1/k) = E x worse."""
+        cfg = configs.get_smoke("kimi-k2-1t-a32b")
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+        p = L.init_moe(KEY, cfg)
+        # positive activations so a +100 router column really is a collapse
+        x = jnp.abs(jax.random.normal(KEY, (2, 32, cfg.d_model)))
+        p_uniform = dict(p, router=jnp.zeros_like(p["router"]))
+        _, aux_u = L.moe(p_uniform, x, cfg)
+        collapse = jnp.zeros_like(p["router"]).at[:, 0].set(100.0)
+        _, aux_c = L.moe(dict(p, router=collapse), x, cfg)
+        assert abs(float(aux_u) - cfg.top_k) < 0.2, aux_u
+        assert float(aux_c) > float(aux_u) * 1.5
+
+    def test_moe_capacity_drops_tokens(self):
+        cfg = dataclasses.replace(
+            configs.get_smoke("grok-1-314b"), dtype=jnp.float32, moe_capacity_factor=0.25
+        )
+        p = L.init_moe(KEY, cfg)
+        x = jax.random.normal(KEY, (1, 32, cfg.d_model))
+        out_small, _ = L.moe(p, x, cfg)
+        out_big, _ = L.moe(p, x, cfg, capacity_factor=8.0)
+        assert float(jnp.abs(out_small - out_big).max()) > 1e-6
+
+    def test_rwkv_state_decay_bounded(self):
+        cfg = dataclasses.replace(configs.get_smoke("rwkv6-3b"), dtype=jnp.float32)
+        from repro.models import rwkv6 as R
+
+        p = R.init_rwkv(KEY, cfg)
+        x = jax.random.normal(KEY, (1, 8, cfg.d_model))
+        xs = R._token_shift(x)
+        _, _, _, _, w = R._projections(p, x, xs, cfg)
+        assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+    def test_mamba_decode_matches_forward(self):
+        cfg = dataclasses.replace(configs.get_smoke("jamba-1.5-large-398b"), dtype=jnp.float32)
+        from repro.models import mamba as M
+
+        p = M.init_mamba(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 9, cfg.d_model))
+        full = M.mamba_forward(p, x, cfg)
+        state = M.init_mamba_state(cfg, 2)
+        outs = []
+        for t in range(9):
+            o, state = M.mamba_decode(p, x[:, t : t + 1], state, cfg)
+            outs.append(o)
+        step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(step), atol=1e-4)
+
+    def test_sliding_window_ring_cache(self):
+        cfg = dataclasses.replace(
+            configs.get_smoke("tinyllama-1.1b"), dtype=jnp.float32, sliding_window=6
+        )
+        params = MD.init(KEY, cfg)
+        B, T = 2, 14
+        batch = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)}
+        full_logits, _ = MD.forward(params, batch, cfg)
+        cache = MD.init_cache(cfg, B, T)
+        assert cache[0]["k"].shape[2] == 6  # ring buffer = window size
+        errs = []
+        for t in range(T):
+            dl, cache = MD.decode_step(
+                params, batch["tokens"][:, t : t + 1], cache, jnp.asarray(t, jnp.int32), cfg
+            )
+            errs.append(float(jnp.abs(dl[:, 0] - full_logits[:, t]).max()))
+        assert max(errs) < 1e-3
+
+    def test_int8_kv_cache_decode(self):
+        """Beyond-paper H8: int8 KV cache halves cache bytes with near-exact
+        decode (argmax-identical on the smoke model)."""
+        cfg = dataclasses.replace(configs.get_smoke("qwen1.5-32b"), dtype=jnp.float32)
+        cfg_q = dataclasses.replace(cfg, kv_quant=True)
+        params = MD.init(KEY, cfg)
+        B, T = 2, 10
+        batch = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)}
+        full, _ = MD.forward(params, batch, cfg)
+        cache = MD.init_cache(cfg_q, B, T)
+        assert cache[0]["k"].dtype == jnp.int8
+        errs, agree = [], []
+        for t in range(T):
+            dl, cache = MD.decode_step(
+                params, batch["tokens"][:, t : t + 1], cache, jnp.asarray(t, jnp.int32), cfg_q
+            )
+            errs.append(float(jnp.abs(dl[:, 0] - full[:, t]).max()))
+            agree.append(bool((jnp.argmax(dl[:, 0], -1) == jnp.argmax(full[:, t], -1)).all()))
+        assert max(errs) < 0.5, errs  # small logit perturbation
+        assert all(agree)  # greedy decode unchanged
+
+    def test_param_counts_sane(self):
+        # full configs: param_counts() total must land near the named scale
+        expect = {
+            "tinyllama-1.1b": (0.9e9, 1.4e9),
+            "gemma-7b": (7e9, 10e9),
+            "grok-1-314b": (250e9, 380e9),
+            "kimi-k2-1t-a32b": (0.7e12, 1.3e12),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = configs.get(arch).param_counts()["total"]
+            assert lo <= n <= hi, (arch, n)
+
+
+class TestServingEngine:
+    def test_batched_engine_matches_manual_greedy(self):
+        from repro.serving.engine import LMEngine, Request
+
+        cfg = dataclasses.replace(configs.get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+        params = MD.init(KEY, cfg)
+        eng = LMEngine(params, cfg, slots=2, max_seq=48, prefill_chunk=4)
+        reqs = [Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=5, id=i) for i in range(3)]
+        outs = eng.run(reqs)
+        assert len(outs) == 3
+        assert outs[0].tokens == outs[1].tokens == outs[2].tokens  # same prompt
+        # manual reference
+        cache = MD.init_cache(cfg, 1, 48)
+        pos = 0
+        for t in [1, 2, 3, 4]:
+            _, cache = MD.decode_step(params, jnp.asarray([[t]], jnp.int32), cache, jnp.asarray(pos, jnp.int32), cfg)
+            pos += 1
+        cur, manual = 5, []
+        for _ in range(5):
+            lg, cache = MD.decode_step(params, jnp.asarray([[cur]], jnp.int32), cache, jnp.asarray(pos, jnp.int32), cfg)
+            cur = int(jnp.argmax(lg[0, -1]))
+            manual.append(cur)
+            pos += 1
+        assert outs[0].tokens == manual
