@@ -1,7 +1,10 @@
 """Kernel micro-benchmarks: us_per_call for the Pallas kernels (interpret
 mode on CPU — correctness-path timing) vs the XLA reference implementation,
-plus the streaming-vs-plain executor comparison (the paper's layer-wise
-disposal strategy, Fig. 4's inference column).
+the streaming-vs-plain executor comparison (the paper's layer-wise disposal
+strategy, Fig. 4's inference column), and the registry head-to-head
+(``bench_executors``): xla vs pallas_fused end-to-end MeshNet forward per
+paper model — the measurement behind making the fused path the production
+default (EXPERIMENTS.md §Perf H1).
 """
 
 from __future__ import annotations
@@ -11,12 +14,16 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import meshnet
-from repro.core.meshnet import MeshNetConfig
+from repro.core import executors, meshnet
+from repro.core.meshnet import MeshNetConfig, PAPER_MODELS
 from repro.core import streaming
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
+
+# Registry head-to-head coverage: the headline full-volume model and the
+# wide failsafe model (where Cin x Cout taps start to be MXU-shaped).
+EXEC_BENCH_MODELS = ("gwm_light", "subvolume_gwm_failsafe")
 
 
 def _time(fn, *args, iters=3) -> float:
@@ -54,4 +61,41 @@ def bench() -> list[tuple[str, float, str]]:
     rows.append(("meshnet_plain_32cube", _time(plain, vol), "all-layers graph"))
     stream = jax.jit(lambda v: streaming.streaming_apply(p, v, cfg))
     rows.append(("meshnet_streaming_32cube", _time(stream, vol), "scan-over-layers (paper's layer disposal)"))
+    return rows
+
+
+def bench_executors(
+    models: tuple[str, ...] = EXEC_BENCH_MODELS,
+    side: int = 16,
+    iters: int = 2,
+) -> list[tuple[str, float, str]]:
+    """Head-to-head end-to-end MeshNet forward per executor backend.
+
+    For each paper model, times the same (1, side^3) volume through the
+    "xla" and "pallas_fused" registry entries. On a CPU host the fused path
+    runs in Pallas interpret mode — orders of magnitude slower, a
+    correctness-path number only; on TPU it is the compiled Mosaic kernel
+    and the comparison is the one that justifies the production default.
+    """
+    rows = []
+    backend = jax.default_backend()
+    vol = jax.random.normal(KEY, (1, side, side, side))
+    for name in models:
+        cfg = PAPER_MODELS[name]
+        p = meshnet.init(KEY, cfg)
+        for exec_name in ("xla", "pallas_fused"):
+            # the registry's cached jit wrapper — the exact callable the
+            # pipeline and engine serve with, not a fresh per-loop trace
+            jf = executors.jitted_apply(exec_name)
+            fn = lambda v, jf=jf, p=p, cfg=cfg: jf(p, v, cfg)
+            note = (
+                "oracle"
+                if exec_name == "xla"
+                else f"interpret-mode on {backend} (compiled Mosaic on TPU)"
+                if backend != "tpu"
+                else "compiled Mosaic"
+            )
+            rows.append(
+                (f"meshnet_{name}_{exec_name}_{side}cube", _time(fn, vol, iters=iters), note)
+            )
     return rows

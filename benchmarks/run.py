@@ -3,6 +3,8 @@
 
 Sections:
   [kernels]       Pallas vs oracle micro-benchmarks (us_per_call)
+  [executors]     registry head-to-head: xla vs pallas_fused end-to-end
+                  MeshNet forward per paper model (core/executors.py)
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -27,6 +29,14 @@ def run_kernels() -> None:
 
     print("\n[kernels] name,us_per_call,derived")
     for name, us, note in bench_kernels.bench():
+        _csv(name, us, note)
+
+
+def run_executors() -> None:
+    from benchmarks import bench_kernels
+
+    print("\n[executors] name,us_per_call,derived")
+    for name, us, note in bench_kernels.bench_executors():
         _csv(name, us, note)
 
 
@@ -106,6 +116,7 @@ def run_roofline() -> None:
 
 SECTIONS = {
     "kernels": run_kernels,
+    "executors": run_executors,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,

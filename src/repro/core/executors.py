@@ -1,0 +1,189 @@
+"""Pluggable MeshNet inference executors — the registry behind the pipeline.
+
+The pipeline (core/pipeline.py) separates two orthogonal choices:
+
+  * **mode** — the spatial strategy: ``full`` (whole volume in one forward),
+    ``subvolume`` (overlap-patched cubes, the paper's failsafe), or
+    ``streaming`` (layer-by-layer schedule, the paper's progressive
+    inference with disposal).
+  * **executor** — the forward-pass *implementation* that runs on each
+    block of work. Every executor exposes the same uniform interface
+    ``apply(params, x, cfg) -> logits`` with ``x: (B, D, H, W[, C])`` and
+    logits ``(B, D, H, W, num_classes)``, numerically equal to
+    ``meshnet.apply`` in eval mode (tests/test_executors.py enforces this).
+
+Built-in executors (DESIGN.md §2):
+
+  ``xla``          — the reference path: ``meshnet.apply``, one XLA op per
+                     conv/BN/ReLU stage. Always available; the parity oracle.
+  ``pallas_fused`` — the production path: ``ops.meshnet_apply``, each hidden
+                     layer is ONE fused Pallas call (conv+BN+ReLU epilogue),
+                     so activations make a single HBM round-trip per layer
+                     (EXPERIMENTS.md §Perf H1). Compiled Mosaic on TPU;
+                     interpret mode (slow, correctness-path) on CPU hosts.
+  ``streaming``    — the memory-floor path: ``streaming.streaming_apply``,
+                     a lax.scan over stacked layers keeping two live
+                     activations regardless of depth (DESIGN.md §4).
+
+``executor="auto"`` (the PipelineConfig default) resolves to the fused
+Pallas path on TPU and to ``xla`` on CPU hosts, where Pallas interpret mode
+is a correctness tool, not a serving backend. Pass an explicit name to
+force a path (benchmarks and parity tests do).
+
+Extending: ``register(ExecutorSpec(...))`` adds a backend (e.g. a sharded
+or quantised forward) without touching the pipeline, engine, or benchmarks
+— they all dispatch through this registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core import meshnet, streaming
+from repro.core.meshnet import MeshNetConfig
+from repro.kernels import ops
+
+# (params, x, cfg) -> logits; x (B, D, H, W[, C]) -> (B, D, H, W, classes)
+ApplyFn = Callable[[Any, jax.Array, MeshNetConfig], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorSpec:
+    """One inference backend.
+
+    ``apply`` is the uniform whole-batch forward. ``streaming_apply`` is the
+    schedule mode="streaming" uses — for the fused path it is the same
+    function, because per-layer fusion already yields the two-live-buffer
+    schedule (each layer's activation is consumed by exactly one next call).
+    """
+
+    name: str
+    apply: ApplyFn
+    streaming_apply: ApplyFn
+    description: str = ""
+
+
+_REGISTRY: dict[str, ExecutorSpec] = {}
+
+#: the name PipelineConfig defaults to; resolved per-backend at run time.
+AUTO = "auto"
+
+
+def register(spec: ExecutorSpec) -> ExecutorSpec:
+    _REGISTRY[spec.name] = spec
+    # Evict only this spec's compiled wrappers; other backends stay hot.
+    for schedule in ("apply", "streaming"):
+        _JIT_CACHE.pop((spec.name, schedule), None)
+    return spec
+
+
+def names() -> list[str]:
+    """Registered executor names (stable order of registration)."""
+    return list(_REGISTRY)
+
+
+def default_executor() -> str:
+    """The production default: fused Pallas on TPU, XLA elsewhere (Pallas
+    interpret mode on CPU is a correctness path, far too slow to serve)."""
+    return "pallas_fused" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve(name: Optional[str]) -> str:
+    """Map None/"auto" to the backend default; validate explicit names."""
+    if name is None or name == AUTO:
+        return default_executor()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown executor {name!r}; registered: {sorted(_REGISTRY)} (or 'auto')"
+        )
+    return name
+
+
+def get(name: Optional[str]) -> ExecutorSpec:
+    """Fetch an executor spec, resolving "auto"."""
+    return _REGISTRY[resolve(name)]
+
+
+def apply(name: Optional[str], params, x: jax.Array, cfg: MeshNetConfig) -> jax.Array:
+    """One-shot dispatch: run ``x`` through the named executor (eager —
+    composable under an outer jit; use ``jitted_apply`` on hot paths)."""
+    return get(name).apply(params, x, cfg)
+
+
+_JIT_CACHE: dict[tuple[str, str], Callable] = {}
+
+
+def _jitted(name: str, schedule: str):
+    key = (name, schedule)
+    if key not in _JIT_CACHE:
+        spec = _REGISTRY[name]
+        fn = spec.apply if schedule == "apply" else spec.streaming_apply
+        # cfg is a frozen (hashable) dataclass -> static, so one executable
+        # is compiled per (executor, schedule, cfg, input shape) and shared
+        # by every pipeline run and serving request that matches.
+        _JIT_CACHE[key] = jax.jit(fn, static_argnums=(2,))
+    return _JIT_CACHE[key]
+
+
+def jitted_apply(
+    name: Optional[str], schedule: str = "apply"
+) -> Callable[[Any, jax.Array, MeshNetConfig], jax.Array]:
+    """Jit-compiled executor forward, cached per (executor, schedule).
+
+    This is the dispatch point for hot paths (pipeline.run, the engine,
+    sub-volume closures): repeated calls — and batched serving requests in
+    any order — reuse one compiled executable per input shape instead of
+    re-tracing a fresh ``jax.jit(lambda ...)`` each run.
+    ``schedule="streaming"`` selects the spec's layer-streamed variant.
+    """
+    if schedule not in ("apply", "streaming"):
+        raise ValueError(f"schedule must be 'apply' or 'streaming', got {schedule!r}")
+    return _jitted(resolve(name), schedule)
+
+
+def make_infer(name: Optional[str], params, cfg: MeshNetConfig) -> Callable[[jax.Array], jax.Array]:
+    """Build the per-block closure used by sub-volume patching: maps
+    (B, d, h, w[, C]) cubes -> (B, d, h, w, classes). Backed by the shared
+    ``jitted_apply`` cache, and compiled once per cube shape because all
+    cubes in a CubeDivider share a static shape."""
+    fn = jitted_apply(name)
+
+    def infer(c: jax.Array) -> jax.Array:
+        return fn(params, c, cfg)
+
+    return infer
+
+
+def _xla_apply(params, x, cfg):
+    return meshnet.apply(params, x, cfg)
+
+
+register(
+    ExecutorSpec(
+        name="xla",
+        apply=_xla_apply,
+        streaming_apply=streaming.streaming_apply,
+        description="reference XLA graph (meshnet.apply); parity oracle",
+    )
+)
+
+register(
+    ExecutorSpec(
+        name="pallas_fused",
+        apply=ops.meshnet_apply,
+        streaming_apply=ops.meshnet_apply,
+        description="fused Pallas conv+BN+ReLU per layer; production TPU path",
+    )
+)
+
+register(
+    ExecutorSpec(
+        name="streaming",
+        apply=streaming.streaming_apply,
+        streaming_apply=streaming.streaming_apply,
+        description="lax.scan over stacked layers; memory-floor schedule",
+    )
+)

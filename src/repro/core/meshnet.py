@@ -42,6 +42,11 @@ class MeshNetConfig:
     channels: int = 5
     num_classes: int = 3
     dilations: Sequence[int] = (1, 2, 4, 8, 16, 8, 4, 2, 1)
+
+    def __post_init__(self):
+        # Keep the config hashable (it crosses jit boundaries as a static
+        # argument in core/executors.py) even when dilations arrive as a list.
+        object.__setattr__(self, "dilations", tuple(self.dilations))
     kernel_size: int = 3
     dropout_rate: float = 0.0  # inference default; training uses >0
     use_batchnorm: bool = True

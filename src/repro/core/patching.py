@@ -121,18 +121,37 @@ class CubeDivider:
 
 def subvolume_inference(
     vol: jax.Array,
-    infer_fn: Callable[[jax.Array], jax.Array],
+    infer_fn: Callable[[jax.Array], jax.Array] | None = None,
     *,
+    params=None,
+    model_cfg=None,
+    executor: str | None = None,
     cube: int = 64,
     overlap: int = MESHNET_RF_RADIUS,
     batch_cubes: int = 1,
 ) -> jax.Array:
-    """Run ``infer_fn`` over sub-cubes of ``vol`` and merge (failsafe mode).
+    """Run per-cube inference over sub-cubes of ``vol`` and merge (failsafe).
 
-    infer_fn maps (B, d, h, w) -> (B, d, h, w, C); compiled once because all
-    cubes share a static shape. ``batch_cubes`` packs cubes into the batch
-    dim — the TPU analogue of Brainchop queuing cube jobs on the WebGL queue.
+    The per-cube forward is either an explicit ``infer_fn`` mapping
+    (B, d, h, w) -> (B, d, h, w, C), or — when ``params``/``model_cfg`` are
+    given instead — a closure built from the executor registry
+    (``executors.make_infer``), so failsafe mode runs the same backend
+    ("xla" | "pallas_fused" | "streaming", or "auto") as every other mode.
+    Either way it is compiled once because all cubes share a static shape.
+    ``batch_cubes`` packs cubes into the batch dim — the TPU analogue of
+    Brainchop queuing cube jobs on the WebGL queue.
     """
+    if infer_fn is None:
+        if params is None or model_cfg is None:
+            raise ValueError("pass infer_fn, or params + model_cfg (+ executor)")
+        from repro.core import executors
+
+        infer_fn = executors.make_infer(executor, params, model_cfg)
+    elif params is not None or model_cfg is not None or executor is not None:
+        raise ValueError(
+            "pass either infer_fn or params/model_cfg/executor, not both — "
+            "an explicit infer_fn would silently shadow the executor choice"
+        )
     divider = CubeDivider(vol.shape[:3], cube=cube, overlap=overlap)
     cubes = divider.split(vol)
     outs: list[jax.Array] = []

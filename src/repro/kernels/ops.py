@@ -4,6 +4,13 @@ Handles what the raw kernels don't: arbitrary spatial shapes (pad to block
 multiples + slice back), dtype policy, BatchNorm folding, backend dispatch
 (interpret on CPU hosts, compiled on TPU), and a kernel-backed MeshNet
 forward pass (`meshnet_apply`) that fuses conv+BN+ReLU per layer.
+
+``meshnet_apply`` is the "pallas_fused" backend of the executor registry
+(core/executors.py) — the pipeline's production path on TPU, selected by
+``PipelineConfig(executor="pallas_fused")`` (or "auto" on a TPU host) and
+benchmarked head-to-head against the XLA reference in
+benchmarks/bench_kernels.py. Parity with ``meshnet.apply`` (eval mode) is
+enforced by tests/test_executors.py across the PAPER_MODELS sweep.
 """
 
 from __future__ import annotations

@@ -7,7 +7,13 @@ Two engines:
 SegmentationEngine — batches incoming MRI volumes and runs the Brainchop
 pipeline (conform -> crop -> MeshNet -> components), with the memory-budget
 guard choosing full-volume vs failsafe sub-volume mode per request —
-exactly the tool's client-side adaptation logic, server-side.
+exactly the tool's client-side adaptation logic, server-side. Inference
+dispatches through the executor registry (core/executors.py): the engine's
+PipelineConfig carries a default backend ("auto" -> fused Pallas on TPU,
+XLA on CPU), and both ``submit`` and the batched ``submit_many`` accept
+per-request mode/executor overrides; the chosen pair is recorded in each
+request's telemetry record. Requests sharing a (mode, executor, shape)
+reuse one compiled executable via the registry's jit cache.
 
 LMEngine — continuous-batching text generation for any ModelConfig:
 chunked prefill (sequence patching, DESIGN.md §4), ring-buffer KV caches
@@ -235,7 +241,8 @@ class LMEngine:
 
 class SegmentationEngine:
     """Server-side Brainchop: picks full-volume vs sub-volume ("failsafe")
-    mode per request from the memory budget, then runs the pipeline."""
+    mode per request from the memory budget, then runs the pipeline through
+    the chosen executor backend (core/executors.py)."""
 
     def __init__(self, params, pipeline_cfg, *, mask_model=None, budget=None):
         from repro.telemetry.budget import MemoryBudget
@@ -257,13 +264,54 @@ class SegmentationEngine:
         except BudgetExceeded:
             return "subvolume"
 
-    def submit(self, vol: jax.Array):
+    def submit(self, vol: jax.Array, *, mode: str | None = None, executor: str | None = None):
+        """Run one volume. ``mode``/``executor`` override the engine's
+        defaults for this request only; ``mode=None`` keeps the budget-driven
+        failsafe selection and ``executor=None`` keeps the engine config's
+        backend (``"auto"`` resolves per host in the pipeline)."""
         import dataclasses as dc
 
         from repro.core import pipeline as pl
 
-        mode = self.pick_mode(self.cfg.volume_shape)
-        cfg = dc.replace(self.cfg, mode=mode, budget=self.budget)
+        mode = mode or self.pick_mode(self.cfg.volume_shape)
+        cfg = dc.replace(
+            self.cfg,
+            mode=mode,
+            budget=self.budget,
+            executor=executor or self.cfg.executor,
+        )
         res = pl.run(cfg, self.params, vol, mask_model=self.mask_model)
         self.log.append(res.record)
         return res
+
+    def submit_many(
+        self,
+        vols: list[jax.Array],
+        *,
+        modes: list[str | None] | None = None,
+        executors: list[str | None] | None = None,
+    ) -> list:
+        """Batched multi-volume submission with per-request mode/executor.
+
+        Requests run in submission order; a ``None`` entry in ``modes``
+        keeps the budget-driven failsafe selection, a ``None`` entry in
+        ``executors`` keeps the engine config's backend. Requests sharing a
+        (mode, executor, shape) reuse one compiled executable regardless of
+        order, via the registry's ``jitted_apply`` cache. Each telemetry
+        record carries the mode/executor that served it plus the request's
+        queue position in ``extra``.
+        """
+        n = len(vols)
+        if modes is not None and len(modes) != n:
+            raise ValueError(f"modes must match len(vols): {len(modes)} != {n}")
+        if executors is not None and len(executors) != n:
+            raise ValueError(f"executors must match len(vols): {len(executors)} != {n}")
+        modes = modes if modes is not None else [None] * n
+        execs = executors if executors is not None else [None] * n
+
+        results = []
+        for i, vol in enumerate(vols):
+            res = self.submit(vol, mode=modes[i], executor=execs[i])
+            res.record.extra["request_index"] = i
+            results.append(res)
+        return results

@@ -39,6 +39,10 @@ class TelemetryRecord:
     mode: str  # full | subvolume | streaming
     status: str  # ok | fail
     times: StageTimes
+    # which forward backend ran (core/executors.py): xla | pallas_fused |
+    # streaming — the server-side analogue of the paper logging the WebGL
+    # vs WASM backend per run.
+    executor: Optional[str] = None
     fail_type: Optional[str] = None
     crop_size: Optional[tuple] = None
     # device context (the simulator's stand-ins for GPU card / texture size)

@@ -1,0 +1,205 @@
+"""Executor registry: parity of the fused Pallas backend with the XLA
+reference across the paper model zoo, plus pipeline/engine dispatch smoke
+tests for every registered backend.
+
+The parity contract is the whole point of the registry: every executor's
+``apply(params, x, cfg)`` must equal ``meshnet.apply`` (eval mode) within
+float tolerance, so mode/backend selection is purely a performance and
+memory decision, never an accuracy one.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executors, meshnet, patching, pipeline
+from repro.core.meshnet import MeshNetConfig, PAPER_MODELS
+from repro.core.pipeline import PipelineConfig
+from repro.data import mri
+from repro.serving.engine import SegmentationEngine
+from repro.telemetry.budget import MemoryBudget
+
+KEY = jax.random.PRNGKey(11)
+
+# Small odd (non-block-multiple) spatial shape: exercises the ops wrapper's
+# pad-to-block + slice-back on every layer while keeping interpret-mode
+# Pallas runtime tolerable on CPU.
+ODD_SHAPE = (1, 10, 12, 14)
+
+# A short-schedule config cheap enough for per-executor pipeline smokes.
+SMALL = MeshNetConfig(dilations=(1, 2, 4))
+
+
+def _parity(cfg: MeshNetConfig, shape=ODD_SHAPE, atol=2e-4, seed=3):
+    p = meshnet.init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    got = executors.apply("pallas_fused", p, x, cfg)
+    expect = executors.apply("xla", p, x, cfg)
+    assert got.shape == expect.shape == shape + (cfg.num_classes,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=atol)
+
+
+class TestRegistry:
+    def test_builtin_names(self):
+        assert {"xla", "pallas_fused", "streaming"} <= set(executors.names())
+
+    def test_auto_resolves_to_registered_backend(self):
+        assert executors.resolve("auto") in executors.names()
+        assert executors.resolve(None) == executors.resolve("auto")
+
+    def test_unknown_executor_raises(self):
+        with pytest.raises(KeyError, match="unknown executor"):
+            executors.resolve("webgl")
+        # ...and the pipeline surfaces it as a config error, not a telemetry
+        # 'fail' record (resolution happens before the budget-guarded region).
+        with pytest.raises(KeyError, match="unknown executor"):
+            pipeline.run(
+                PipelineConfig(model=SMALL, volume_shape=(8, 8, 8), executor="webgl"),
+                meshnet.init(KEY, SMALL),
+                jnp.zeros((8, 8, 8)),
+            )
+
+    def test_default_executor_matches_backend(self):
+        want = "pallas_fused" if jax.default_backend() == "tpu" else "xla"
+        assert executors.default_executor() == want
+
+    def test_list_dilations_config_crosses_jit_boundary(self):
+        # cfg is a static jit argument in jitted_apply; list dilations must
+        # be normalised to a hashable tuple by MeshNetConfig.__post_init__.
+        cfg = MeshNetConfig(dilations=[1, 2])
+        assert cfg.dilations == (1, 2)
+        p = meshnet.init(KEY, cfg)
+        x = jax.random.normal(KEY, (1, 8, 8, 8))
+        out = executors.jitted_apply("xla")(p, x, cfg)
+        assert out.shape == (1, 8, 8, 8, cfg.num_classes)
+
+
+class TestFusedParity:
+    """ops.meshnet_apply == meshnet.apply (eval) across the model zoo."""
+
+    @pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+    def test_paper_models(self, name):
+        _parity(PAPER_MODELS[name])
+
+    def test_no_batchnorm(self):
+        _parity(MeshNetConfig(use_batchnorm=False))
+
+    def test_nontrivial_bn_stats(self):
+        # Fold-correctness is invisible with init stats (mean 0 / var 1):
+        # perturb the running stats so the fused scale/offset path is real.
+        cfg = MeshNetConfig(dilations=(1, 2, 4))
+        p = meshnet.init(KEY, cfg)
+        k = jax.random.PRNGKey(5)
+        for layer in p["layers"]:
+            k, k1, k2 = jax.random.split(k, 3)
+            layer["bn_mean"] = jax.random.normal(k1, layer["bn_mean"].shape) * 0.3
+            layer["bn_var"] = 0.5 + jax.random.uniform(k2, layer["bn_var"].shape)
+        x = jax.random.normal(jax.random.PRNGKey(6), ODD_SHAPE)
+        got = executors.apply("pallas_fused", p, x, cfg)
+        expect = executors.apply("xla", p, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=2e-4)
+
+    @pytest.mark.parametrize("shape", [(1, 16, 16, 16), (2, 9, 17, 13)])
+    def test_block_multiple_and_batched_odd(self, shape):
+        _parity(MeshNetConfig(dilations=(1, 2, 4)), shape=shape)
+
+    def test_streaming_executor_parity(self):
+        cfg = MeshNetConfig(dilations=(1, 2, 4))
+        p = meshnet.init(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), ODD_SHAPE)
+        np.testing.assert_allclose(
+            np.asarray(executors.apply("streaming", p, x, cfg)),
+            np.asarray(executors.apply("xla", p, x, cfg)),
+            atol=1e-4,
+        )
+
+
+class TestPipelineDispatch:
+    def _setup(self):
+        params = meshnet.init(KEY, SMALL)
+        vol, _ = mri.generate(KEY, mri.SyntheticMRIConfig(shape=(16, 16, 16)))
+        return params, vol
+
+    @pytest.mark.parametrize("executor", ["xla", "pallas_fused", "streaming"])
+    @pytest.mark.parametrize("mode", ["full", "subvolume", "streaming"])
+    def test_all_modes_all_executors(self, mode, executor):
+        params, vol = self._setup()
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode=mode, cube=8, overlap=4,
+            min_component_size=4, executor=executor,
+        )
+        res = pipeline.run(pc, params, vol)
+        assert res.record.status == "ok", res.record.fail_type
+        assert res.segmentation.shape == (16, 16, 16)
+        assert res.record.executor == executor  # recorded in telemetry
+
+    def test_executors_agree_on_segmentation(self):
+        params, vol = self._setup()
+        segs = {}
+        for executor in ("xla", "pallas_fused"):
+            pc = PipelineConfig(
+                model=SMALL, volume_shape=(16, 16, 16), mode="full",
+                min_component_size=4, executor=executor,
+            )
+            segs[executor] = np.asarray(pipeline.run(pc, params, vol).segmentation)
+        np.testing.assert_array_equal(segs["xla"], segs["pallas_fused"])
+
+    def test_subvolume_executor_closure_matches_explicit_infer_fn(self):
+        params, vol = self._setup()
+        via_registry = patching.subvolume_inference(
+            vol, params=params, model_cfg=SMALL, executor="xla", cube=8, overlap=7
+        )
+        via_closure = patching.subvolume_inference(
+            vol, jax.jit(lambda c: meshnet.apply(params, c, SMALL)), cube=8, overlap=7
+        )
+        np.testing.assert_allclose(
+            np.asarray(via_registry), np.asarray(via_closure), atol=1e-6
+        )
+
+    def test_subvolume_requires_model_or_fn(self):
+        with pytest.raises(ValueError, match="infer_fn"):
+            patching.subvolume_inference(jnp.zeros((8, 8, 8)), cube=4)
+
+
+class TestEngineDispatch:
+    def _engine(self):
+        params = meshnet.init(KEY, SMALL)
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), cube=8, overlap=4,
+            min_component_size=4,
+        )
+        # Tight budget: streaming fits, the naive full graph would not.
+        engine = SegmentationEngine(
+            params, pc, budget=MemoryBudget(8 * 1024 * 1024, name="tight")
+        )
+        return engine
+
+    def test_submit_many_records_mode_and_executor(self):
+        engine = self._engine()
+        vols = [
+            mri.generate(jax.random.PRNGKey(i), mri.SyntheticMRIConfig(shape=(16, 16, 16)))[0]
+            for i in range(3)
+        ]
+        results = engine.submit_many(
+            vols,
+            modes=[None, "subvolume", None],
+            executors=[None, "xla", "streaming"],
+        )
+        assert len(results) == len(engine.log.records) == 3
+        # results come back in submission order with telemetry attribution
+        for i, res in enumerate(results):
+            assert res.record.status == "ok"
+            assert res.record.extra["request_index"] == i
+            assert res.record.executor in executors.names()
+        assert results[1].record.mode == "subvolume"
+        assert results[2].record.executor == "streaming"
+        # default requests keep the budget-driven failsafe selection
+        assert results[0].record.mode == engine.pick_mode((16, 16, 16))
+
+    def test_submit_many_length_mismatch(self):
+        engine = self._engine()
+        with pytest.raises(ValueError, match="must match"):
+            engine.submit_many([jnp.zeros((16, 16, 16))], modes=["full", "full"])
