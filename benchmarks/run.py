@@ -1,10 +1,14 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,hbm_bytes_modeled,derived`` CSV.
 """Benchmark harness entrypoint: PYTHONPATH=src python -m benchmarks.run
 
 Sections:
   [kernels]       Pallas vs oracle micro-benchmarks (us_per_call)
-  [executors]     registry head-to-head: xla vs pallas_fused end-to-end
-                  MeshNet forward per paper model (core/executors.py)
+  [executors]     registry head-to-head: xla vs pallas_fused vs
+                  pallas_megakernel end-to-end MeshNet forward per paper
+                  model (core/executors.py)
+  [traffic]       modeled HBM bytes per forward at the paper's 256^3
+                  volume for every registered executor (EXPERIMENTS.md
+                  §Perf H9: megakernel >= 5x under pallas_fused)
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -12,32 +16,69 @@ Sections:
                   results exist (results/dryrun_16x16.json)
 
 Pass section names to run a subset: python -m benchmarks.run table2 roofline
+Pass ``--json`` to also write the machine-readable perf trajectory
+``BENCH_2.json`` at the repo root: per measured section, a list of
+``{name, us_per_call, hbm_bytes_modeled}`` rows (the file CI uploads as
+an artifact so kernel regressions fail fast).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 
+#: repo-root path of the machine-readable perf trajectory.
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
-def _csv(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.1f},{derived}")
+#: sections emitting (name, us_per_call, hbm_bytes_modeled, note) rows.
+MEASURED_SECTIONS = ("kernels", "executors", "traffic")
 
 
-def run_kernels() -> None:
+def _csv(name: str, us: float, hbm, derived: str = "") -> None:
+    hb = "" if hbm is None else str(int(hbm))
+    print(f"{name},{us:.1f},{hb},{derived}")
+
+
+def _rows_to_json(rows):
+    return [
+        {
+            "name": name,
+            "us_per_call": round(us, 1),
+            "hbm_bytes_modeled": None if hbm is None else int(hbm),
+        }
+        for name, us, hbm, _ in rows
+    ]
+
+
+def run_kernels() -> list:
     from benchmarks import bench_kernels
 
-    print("\n[kernels] name,us_per_call,derived")
-    for name, us, note in bench_kernels.bench():
-        _csv(name, us, note)
+    rows = bench_kernels.bench()
+    print("\n[kernels] name,us_per_call,hbm_bytes_modeled,derived")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
 
 
-def run_executors() -> None:
+def run_executors() -> list:
     from benchmarks import bench_kernels
 
-    print("\n[executors] name,us_per_call,derived")
-    for name, us, note in bench_kernels.bench_executors():
-        _csv(name, us, note)
+    rows = bench_kernels.bench_executors()
+    print("\n[executors] name,us_per_call,hbm_bytes_modeled,derived")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
+def run_traffic() -> list:
+    from benchmarks import bench_kernels
+
+    rows = bench_kernels.bench_traffic()
+    print("\n[traffic] name,us_per_call,hbm_bytes_modeled,derived")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
 
 
 def run_table2() -> None:
@@ -102,8 +143,6 @@ def run_interventions() -> None:
 
 
 def run_roofline() -> None:
-    import os
-
     from benchmarks import roofline
 
     path = os.path.join(roofline.RESULTS_DIR, "dryrun_16x16.json")
@@ -117,6 +156,7 @@ def run_roofline() -> None:
 SECTIONS = {
     "kernels": run_kernels,
     "executors": run_executors,
+    "traffic": run_traffic,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,
@@ -124,10 +164,31 @@ SECTIONS = {
 }
 
 
-def main() -> None:
-    wanted = sys.argv[1:] or list(SECTIONS)
+def main(argv: list[str] | None = None, json_path: str = JSON_PATH) -> None:
+    args = list(sys.argv[1:] if argv is None else argv)
+    emit_json = "--json" in args
+    args = [a for a in args if a != "--json"]
+    wanted = args or list(SECTIONS)
+    trajectory: dict[str, list] = {}
     for name in wanted:
-        SECTIONS[name]()
+        rows = SECTIONS[name]()
+        if emit_json and name in MEASURED_SECTIONS and rows:
+            trajectory[name] = _rows_to_json(rows)
+    if emit_json:
+        # Merge into the existing trajectory so running a subset of
+        # sections refreshes only those sections instead of clobbering
+        # the rest of the committed file.
+        merged: dict[str, list] = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    merged = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                merged = {}
+        merged.update(trajectory)
+        with open(json_path, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"\nwrote {os.path.abspath(json_path)}")
 
 
 if __name__ == "__main__":

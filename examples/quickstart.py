@@ -33,8 +33,9 @@ result = trainer.train(tcfg, verbose=True)
 vol, truth = mri.generate(jax.random.PRNGKey(42), mri.SyntheticMRIConfig(shape=SHAPE))
 
 # 3. Run the Brainchop pipeline: conform -> full-volume inference -> CC filter.
-#    executor="auto" picks the fused Pallas backend on TPU and XLA on CPU;
-#    pass executor="pallas_fused" to force the fused kernel path anywhere.
+#    executor="auto" picks the depth-first Pallas megakernel on TPU (when
+#    its tile plan fits VMEM, else the per-layer fused kernel) and XLA on
+#    CPU; pass executor="pallas_megakernel" to force the tiled path anywhere.
 pcfg = PipelineConfig(model=tcfg.model, volume_shape=SHAPE, mode="full", min_component_size=8)
 out = run(pcfg, result.params, vol)
 seg = out.segmentation

@@ -2,7 +2,8 @@
 deployment story on a server: the engine picks full-volume vs failsafe
 sub-volume mode per request from the memory budget, dispatches inference
 through the executor registry (core/executors.py — "auto" resolves to the
-fused Pallas backend on TPU, XLA on CPU), runs the pipeline, and records
+depth-first Pallas megakernel on TPU when its tile plan fits VMEM, else
+the per-layer fused backend; XLA on CPU), runs the pipeline, and records
 telemetry (success rate, stage timings, mode/executor served) like the
 paper's Table III/IV dataset.
 

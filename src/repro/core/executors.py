@@ -16,19 +16,31 @@ Built-in executors (DESIGN.md §2):
 
   ``xla``          — the reference path: ``meshnet.apply``, one XLA op per
                      conv/BN/ReLU stage. Always available; the parity oracle.
-  ``pallas_fused`` — the production path: ``ops.meshnet_apply``, each hidden
+  ``pallas_fused`` — per-layer fusion: ``ops.meshnet_apply``, each hidden
                      layer is ONE fused Pallas call (conv+BN+ReLU epilogue),
                      so activations make a single HBM round-trip per layer
                      (EXPERIMENTS.md §Perf H1). Compiled Mosaic on TPU;
                      interpret mode (slow, correctness-path) on CPU hosts.
+  ``pallas_megakernel`` — depth-first tiling: ``ops.meshnet_apply_megakernel``
+                     runs the *whole* hidden stack (and the head) per
+                     VMEM-resident tile, so hidden activations never touch
+                     HBM within a segment — the traffic floor and the
+                     production TPU path (EXPERIMENTS.md §Perf H9).
   ``streaming``    — the memory-floor path: ``streaming.streaming_apply``,
                      a lax.scan over stacked layers keeping two live
                      activations regardless of depth (DESIGN.md §4).
 
-``executor="auto"`` (the PipelineConfig default) resolves to the fused
-Pallas path on TPU and to ``xla`` on CPU hosts, where Pallas interpret mode
-is a correctness tool, not a serving backend. Pass an explicit name to
-force a path (benchmarks and parity tests do).
+``executor="auto"`` (the PipelineConfig default) resolves per backend: on
+TPU it prefers ``pallas_megakernel`` whenever the depth-first tile plan
+fits the VMEM budget (kernels/megakernel.py), falling back to
+``pallas_fused``; on CPU hosts it resolves to ``xla``, where Pallas
+interpret mode is a correctness tool, not a serving backend. Pass an
+explicit name to force a path (benchmarks and parity tests do).
+
+Each spec also carries ``hbm_bytes`` — the modeled HBM traffic of one
+forward under that executor's schedule (telemetry/traffic.py) — which the
+pipeline stamps into every telemetry record and the benchmarks report
+next to wall-clock.
 
 Extending: ``register(ExecutorSpec(...))`` adds a backend (e.g. a sharded
 or quantised forward) without touching the pipeline, engine, or benchmarks
@@ -44,10 +56,14 @@ import jax
 
 from repro.core import meshnet, streaming
 from repro.core.meshnet import MeshNetConfig
-from repro.kernels import ops
+from repro.kernels import megakernel, ops
+from repro.telemetry import traffic
 
 # (params, x, cfg) -> logits; x (B, D, H, W[, C]) -> (B, D, H, W, classes)
 ApplyFn = Callable[[Any, jax.Array, MeshNetConfig], jax.Array]
+
+# (cfg, volume_shape, batch) -> modeled HBM bytes per forward, or None.
+BytesFn = Callable[..., Optional[int]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,15 +71,18 @@ class ExecutorSpec:
     """One inference backend.
 
     ``apply`` is the uniform whole-batch forward. ``streaming_apply`` is the
-    schedule mode="streaming" uses — for the fused path it is the same
-    function, because per-layer fusion already yields the two-live-buffer
-    schedule (each layer's activation is consumed by exactly one next call).
+    schedule mode="streaming" uses — for the fused paths it is the same
+    function, because per-layer/per-tile fusion already yields the
+    two-live-buffer schedule (each layer's activation is consumed by
+    exactly one next call). ``hbm_bytes(cfg, vol, batch=1)`` prices the
+    schedule's HBM traffic (telemetry/traffic.py); None if unmodeled.
     """
 
     name: str
     apply: ApplyFn
     streaming_apply: ApplyFn
     description: str = ""
+    hbm_bytes: Optional[BytesFn] = None
 
 
 _REGISTRY: dict[str, ExecutorSpec] = {}
@@ -85,16 +104,35 @@ def names() -> list[str]:
     return list(_REGISTRY)
 
 
-def default_executor() -> str:
-    """The production default: fused Pallas on TPU, XLA elsewhere (Pallas
-    interpret mode on CPU is a correctness path, far too slow to serve)."""
-    return "pallas_fused" if jax.default_backend() == "tpu" else "xla"
+def default_executor(
+    model: Optional[MeshNetConfig] = None,
+    volume_shape: Optional[tuple[int, int, int]] = None,
+) -> str:
+    """The production default. On TPU: the depth-first megakernel when a
+    tile plan fits the VMEM budget for this (model, volume), else the
+    per-layer fused path; without a model to plan for, the fused path.
+    On CPU hosts: XLA (Pallas interpret mode is a correctness path, far
+    too slow to serve)."""
+    if jax.default_backend() != "tpu":
+        return "xla"
+    if model is None:
+        return "pallas_fused"
+    try:
+        megakernel.plan_for_config(model, volume_shape or (256, 256, 256))
+        return "pallas_megakernel"
+    except ValueError:
+        return "pallas_fused"
 
 
-def resolve(name: Optional[str]) -> str:
-    """Map None/"auto" to the backend default; validate explicit names."""
+def resolve(
+    name: Optional[str],
+    model: Optional[MeshNetConfig] = None,
+    volume_shape: Optional[tuple[int, int, int]] = None,
+) -> str:
+    """Map None/"auto" to the backend default (model/shape aware when the
+    caller can supply them); validate explicit names."""
     if name is None or name == AUTO:
-        return default_executor()
+        return default_executor(model, volume_shape)
     if name not in _REGISTRY:
         raise KeyError(
             f"unknown executor {name!r}; registered: {sorted(_REGISTRY)} (or 'auto')"
@@ -111,6 +149,20 @@ def apply(name: Optional[str], params, x: jax.Array, cfg: MeshNetConfig) -> jax.
     """One-shot dispatch: run ``x`` through the named executor (eager —
     composable under an outer jit; use ``jitted_apply`` on hot paths)."""
     return get(name).apply(params, x, cfg)
+
+
+def modeled_hbm_bytes(
+    name: Optional[str],
+    cfg: MeshNetConfig,
+    volume_shape: tuple[int, int, int],
+    batch: int = 1,
+) -> Optional[int]:
+    """Modeled HBM bytes of one forward under the named executor's
+    schedule, or None if the backend has no traffic model."""
+    spec = _REGISTRY[resolve(name, cfg, volume_shape)]
+    if spec.hbm_bytes is None:
+        return None
+    return spec.hbm_bytes(cfg, volume_shape, batch=batch)
 
 
 _JIT_CACHE: dict[tuple[str, str], Callable] = {}
@@ -149,7 +201,7 @@ def make_infer(name: Optional[str], params, cfg: MeshNetConfig) -> Callable[[jax
     (B, d, h, w[, C]) cubes -> (B, d, h, w, classes). Backed by the shared
     ``jitted_apply`` cache, and compiled once per cube shape because all
     cubes in a CubeDivider share a static shape."""
-    fn = jitted_apply(name)
+    fn = jitted_apply(resolve(name, cfg))
 
     def infer(c: jax.Array) -> jax.Array:
         return fn(params, c, cfg)
@@ -167,6 +219,7 @@ register(
         apply=_xla_apply,
         streaming_apply=streaming.streaming_apply,
         description="reference XLA graph (meshnet.apply); parity oracle",
+        hbm_bytes=traffic.meshnet_xla_bytes,
     )
 )
 
@@ -175,7 +228,19 @@ register(
         name="pallas_fused",
         apply=ops.meshnet_apply,
         streaming_apply=ops.meshnet_apply,
-        description="fused Pallas conv+BN+ReLU per layer; production TPU path",
+        description="fused Pallas conv+BN+ReLU per layer",
+        hbm_bytes=traffic.meshnet_fused_bytes,
+    )
+)
+
+register(
+    ExecutorSpec(
+        name="pallas_megakernel",
+        apply=ops.meshnet_apply_megakernel,
+        streaming_apply=ops.meshnet_apply_megakernel,
+        description="depth-first tiled whole-stack Pallas megakernel; "
+        "production TPU path when the tile plan fits VMEM",
+        hbm_bytes=traffic.meshnet_megakernel_bytes,
     )
 )
 
@@ -185,5 +250,6 @@ register(
         apply=streaming.streaming_apply,
         streaming_apply=streaming.streaming_apply,
         description="lax.scan over stacked layers; memory-floor schedule",
+        hbm_bytes=traffic.meshnet_streaming_bytes,
     )
 )

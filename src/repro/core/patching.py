@@ -136,7 +136,8 @@ def subvolume_inference(
     (B, d, h, w) -> (B, d, h, w, C), or — when ``params``/``model_cfg`` are
     given instead — a closure built from the executor registry
     (``executors.make_infer``), so failsafe mode runs the same backend
-    ("xla" | "pallas_fused" | "streaming", or "auto") as every other mode.
+    ("xla" | "pallas_fused" | "pallas_megakernel" | "streaming", or
+    "auto") as every other mode.
     Either way it is compiled once because all cubes share a static shape.
     ``batch_cubes`` packs cubes into the batch dim — the TPU analogue of
     Brainchop queuing cube jobs on the WebGL queue.

@@ -7,9 +7,12 @@ Inference dispatches through the pluggable executor registry
 (full / subvolume / streaming) and ``PipelineConfig.executor`` picks the
 forward implementation that runs on each block of work — ``"xla"`` (the
 reference graph), ``"pallas_fused"`` (one fused conv+BN+ReLU Pallas call
-per layer, the production TPU path), or ``"streaming"`` (scan-over-layers).
-The default ``"auto"`` resolves to the fused kernel on TPU and XLA on CPU
-hosts. The executor that actually ran is recorded in the telemetry record.
+per layer), ``"pallas_megakernel"`` (the whole stack per VMEM-resident
+tile, the production TPU path), or ``"streaming"`` (scan-over-layers).
+The default ``"auto"`` resolves per host: the megakernel on TPU when its
+tile plan fits VMEM, else the fused kernel; XLA on CPU hosts. The executor
+that actually ran — and the modeled HBM bytes its schedule moves for this
+volume (telemetry/traffic.py) — is recorded in the telemetry record.
 
 Each stage is timed into a telemetry record, mirroring Table IV's
 per-stage columns (Preprocessing / Cropping / Inference / Merging /
@@ -21,6 +24,7 @@ TPU-equivalent limits.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Optional
 
@@ -42,8 +46,10 @@ class PipelineConfig:
     volume_shape: tuple[int, int, int] = (256, 256, 256)
     # inference mode: "full" | "subvolume" | "streaming"
     mode: str = "full"
-    # forward implementation: "auto" | "xla" | "pallas_fused" | "streaming"
-    # (core/executors.py; "auto" -> pallas_fused on TPU, xla on CPU hosts)
+    # forward implementation: "auto" | "xla" | "pallas_fused" |
+    # "pallas_megakernel" | "streaming" (core/executors.py; "auto" ->
+    # megakernel on TPU when its tile plan fits VMEM, else pallas_fused;
+    # xla on CPU hosts)
     executor: str = executors.AUTO
     cube: int = 64
     overlap: int = patching.MESHNET_RF_RADIUS
@@ -77,10 +83,39 @@ def run(
     failures — returns a failed TelemetryRecord (status='fail'), matching
     the tool's telemetry semantics."""
     times = StageTimes()
-    exec_name = executors.resolve(cfg.executor)
+    exec_name = executors.resolve(cfg.executor, cfg.model, cfg.volume_shape)
     rec = TelemetryRecord(
         model=cfg.name, mode=cfg.mode, status="ok", times=times, executor=exec_name
     )
+    try:
+        # Price the inference schedule's HBM traffic for this request: the
+        # per-forward model times the number of forwards the mode implies.
+        # For the megakernel this also *plans* the schedule, so an
+        # infeasible plan (working set over VMEM at any tile) surfaces
+        # here — before any compute — rather than at trace time inside
+        # the budget-guarded region below.
+        if cfg.mode == "subvolume":
+            ncubes = math.prod(
+                -(-s // cfg.cube) for s in cfg.volume_shape
+            )
+            per_cube = executors.modeled_hbm_bytes(
+                exec_name, cfg.model, (cfg.cube + 2 * cfg.overlap,) * 3
+            )
+            rec.hbm_bytes_modeled = None if per_cube is None else ncubes * per_cube
+        else:
+            rec.hbm_bytes_modeled = executors.modeled_hbm_bytes(
+                exec_name, cfg.model, cfg.volume_shape
+            )
+        if cfg.use_cropping and mask_model is not None:
+            # the mask forward runs under the same executor; probe it too
+            executors.modeled_hbm_bytes(exec_name, mask_model[1], cfg.volume_shape)
+    except ValueError:
+        # Unplannable schedule: the forward itself would raise the same
+        # error, so keep the never-raises telemetry contract and report a
+        # failed run (the VMEM analogue of the budget fail types).
+        rec.status = "fail"
+        rec.fail_type = "vmem_oom"
+        return PipelineResult(segmentation=None, record=rec)
     budget = cfg.budget or MemoryBudget.unlimited()
 
     try:

@@ -6,9 +6,22 @@ Brainchop's WebGL backend runs this conv as fragment-shader passes over 2-D
 texture tilings of the volume; the cost model there is texture bandwidth.
 On TPU the equivalent wall is HBM->VMEM traffic: a 256^3 x 5ch f32 volume is
 335 MB, read 27x by a naive gather-per-tap schedule. This kernel tiles the
-volume into VMEM-resident cubes and reads each input voxel exactly once per
-neighbourhood (27 disjoint blocks streamed per output block), computing all
-27 taps from VMEM.
+volume into VMEM-resident cubes and reads, per output block, exactly the
+haloed input neighbourhood it needs — a single (block+2*dilation)^3 DMA.
+
+Two schedules, selected by ``variant``:
+
+  ``halo`` (default) — the input stays in HBM (``memory_space=ANY``) and the
+    kernel DMAs one haloed window per output block into a VMEM scratch
+    buffer. Per-block traffic is ``(block+2d)^3`` — the read floor for a
+    blocked dilated conv. This replaced the original 27-view schedule,
+    whose traffic was a full ``27*block^3`` per output block regardless of
+    dilation (~28x the floor at d=1, see DESIGN.md §2 traffic table).
+  ``views`` — the original schedule: the +-dilation neighbourhood expressed
+    as 27 disjoint offset views of the same padded input (the canonical
+    BlockSpec halo pattern). Kept as a bit-exactness oracle for the halo
+    schedule (tests/test_kernels.py) and as the reference point for the
+    traffic model in telemetry/traffic.py.
 
 TPU-native design notes
   * channels-last layout: C rides the lane dimension. MeshNet's C=5 is far
@@ -17,16 +30,17 @@ TPU-native design notes
     TPU and the win comes from the blocking, not systolic compute. The
     kernel is still correct (and becomes MXU-bound) for wide variants
     (failsafe 21ch / atlas 18ch) where Cin x Cout taps start to matter.
-  * block size: `block` (default 16 = max MeshNet dilation) gives
-    27 x block^3 x C x 4 B of VMEM-resident input — 2.2 MB at C=5 f32,
-    comfortably under the ~16 MB VMEM budget, with hardware-aligned
-    (8, 128) tiles when W*C is padded to the lane multiple by Mosaic.
-  * halo handling: BlockSpec tiles are disjoint, so the +-dilation
-    neighbourhood is expressed as 27 *offset views of the same padded
-    input* (index maps i+dz-1 etc.), the canonical Pallas halo pattern.
+  * block size: ``block`` (default 16 = max MeshNet dilation) keeps the
+    haloed window at most (3*block)^3 * C * 4 B of VMEM — 2.2 MB at C=5
+    f32, comfortably under the ~16 MB VMEM budget. ``vmem_bytes`` prices
+    the working set exactly and ``dilated_conv3d`` refuses (with a
+    suggested smaller block) before a call would exceed ``VMEM_BUDGET``.
   * optional fused affine+ReLU epilogue: folds inference-mode BatchNorm and
     activation into the conv's output block while it is still in VMEM
     (saves one full HBM round-trip per layer — see EXPERIMENTS.md §Perf).
+  * whole-stack fusion: kernels/megakernel.py goes one step further and
+    runs *all* hidden layers per VMEM-resident tile (EXPERIMENTS.md §Perf
+    H9); this module remains the per-layer building block.
 
 Validated in interpret mode on CPU against kernels/ref.py for every
 (shape, dtype, dilation, channels) in the test sweep.
@@ -35,22 +49,79 @@ Validated in interpret mode on CPU against kernels/ref.py for every
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: VMEM ceiling per core the guard prices against (v4/v5e have 16 MiB).
+VMEM_BUDGET = 16 * 1024 * 1024
 
 
-def _conv_kernel(*refs, dilation: int, block: int, fuse_affine: bool):
-    """Kernel body. refs = 27 input views + w + b (+ scale, offset) + out."""
+def _halo_kernel(*refs, dilation: int, block: int, fuse_affine: bool):
+    """Haloed-load kernel body. refs = x(ANY) + w + b (+ s, o) + out + scratch."""
+    if fuse_affine:
+        x_ref, w_ref, b_ref, s_ref, o_ref, out_ref, buf, sem = refs
+    else:
+        x_ref, w_ref, b_ref, out_ref, buf, sem = refs
+        s_ref = o_ref = None
+    bi, zi, yi, xi = (pl.program_id(i) for i in range(4))
+    d, b = dilation, block
+    size = b + 2 * d
+    # One DMA per output block: exactly the (b+2d)^3 neighbourhood, from the
+    # d-padded input resident in HBM.
+    dma = pltpu.make_async_copy(
+        x_ref.at[
+            bi,
+            pl.ds(zi * b, size),
+            pl.ds(yi * b, size),
+            pl.ds(xi * b, size),
+            :,
+        ],
+        buf,
+        sem,
+    )
+    dma.start()
+    dma.wait()
+
+    w = w_ref[...]  # (3, 3, 3, Cin, Cout)
+    acc = jnp.zeros((b, b, b, w.shape[-1]), jnp.float32)
+    for tz in (-1, 0, 1):
+        for ty in (-1, 0, 1):
+            for tx in (-1, 0, 1):
+                # Output voxel p reads input p + t*d (correlation, as XLA);
+                # buffer index 0 is global block origin minus d.
+                sl = buf[
+                    d + tz * d : d + tz * d + b,
+                    d + ty * d : d + ty * d + b,
+                    d + tx * d : d + tx * d + b,
+                    :,
+                ]
+                acc = acc + jnp.einsum(
+                    "zyxi,io->zyxo",
+                    sl.astype(jnp.float32),
+                    w[tz + 1, ty + 1, tx + 1].astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+    out = acc + b_ref[...].astype(jnp.float32)
+    if fuse_affine:
+        out = out * s_ref[...].astype(jnp.float32) + o_ref[...].astype(jnp.float32)
+        out = jnp.maximum(out, 0.0)
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def _views_kernel(*refs, dilation: int, block: int, fuse_affine: bool):
+    """27-view kernel body. refs = 27 input views + w + b (+ scale, offset) + out."""
     if fuse_affine:
         *xs, w_ref, b_ref, s_ref, o_ref, out_ref = refs
     else:
         *xs, w_ref, b_ref, out_ref = refs
         s_ref = o_ref = None
     # Assemble the (3b, 3b, 3b, Cin) neighbourhood from 27 (b,b,b,Cin) views.
-    # Loads stay in VMEM; concatenate is a register/VMEM reshuffle.
+    # Loads stay in VMEM; concatenate is a register/VMEM reshuffle (and is
+    # why this variant's working set is ~2x the halo schedule's —
+    # ``vmem_bytes`` prices the assembled buffer).
     planes = []
     for zi in range(3):
         rows = []
@@ -89,7 +160,7 @@ def _conv_kernel(*refs, dilation: int, block: int, fuse_affine: bool):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dilation", "block", "interpret", "fuse_affine"),
+    static_argnames=("dilation", "block", "interpret", "fuse_affine", "variant"),
 )
 def dilated_conv3d(
     x: jax.Array,
@@ -102,6 +173,7 @@ def dilated_conv3d(
     block: int = 16,
     interpret: bool = True,
     fuse_affine: bool = False,
+    variant: str = "halo",
 ) -> jax.Array:
     """'Same'-padded 3-D dilated conv via Pallas.
 
@@ -109,58 +181,148 @@ def dilated_conv3d(
     If ``fuse_affine``: returns relu(conv(x) * scale + offset) — the folded
     inference BatchNorm epilogue. Requires ``dilation <= block`` and spatial
     dims divisible by ``block`` (the ops wrapper pads as needed).
+    ``variant`` picks the schedule: "halo" (single haloed DMA per block,
+    the production path) or "views" (27 offset BlockSpec views, the
+    bit-exact legacy oracle).
     """
     if dilation > block:
         raise ValueError(f"dilation {dilation} > block {block}")
+    if variant not in ("halo", "views"):
+        raise ValueError(f"variant must be 'halo' or 'views', got {variant!r}")
     B, D, H, W, Cin = x.shape
     Cout = w.shape[-1]
     assert D % block == H % block == W % block == 0, (x.shape, block)
-    # One extra block of zero padding per side supplies the halo.
-    xp = jnp.pad(x, [(0, 0)] + [(block, block)] * 3 + [(0, 0)])
+    check_vmem(block, Cin, Cout, dilation=dilation,
+               dtype_bytes=x.dtype.itemsize, variant=variant)
 
     grid = (B, D // block, H // block, W // block)
-    blk = (1, block, block, block, Cin)
 
-    def mk_index(dz, dy, dx):
-        return lambda bi, zi, yi, xi: (bi, zi + dz, yi + dy, xi + dx, 0)
-
-    in_specs = [
-        pl.BlockSpec(blk, mk_index(dz, dy, dx))
-        for dz in range(3)
-        for dy in range(3)
-        for dx in range(3)
-    ]
-    in_specs.append(pl.BlockSpec(w.shape, lambda *_: (0,) * 5))  # weights
-    in_specs.append(pl.BlockSpec(b.shape, lambda *_: (0,)))  # bias
-    args = [xp] * 27 + [w, b]
     if fuse_affine:
         if scale is None:
             scale = jnp.ones((Cout,), x.dtype)
         if offset is None:
             offset = jnp.zeros((Cout,), x.dtype)
-        in_specs.append(pl.BlockSpec(scale.shape, lambda *_: (0,)))
-        in_specs.append(pl.BlockSpec(offset.shape, lambda *_: (0,)))
-        args += [scale, offset]
 
     out_spec = pl.BlockSpec(
         (1, block, block, block, Cout), lambda bi, zi, yi, xi: (bi, zi, yi, xi, 0)
     )
-    kernel = functools.partial(
-        _conv_kernel, dilation=dilation, block=block, fuse_affine=fuse_affine
-    )
+    out_shape = jax.ShapeDtypeStruct((B, D, H, W, Cout), x.dtype)
+
+    if variant == "halo":
+        # d of zero padding per side supplies the halo; the padded volume
+        # stays in HBM and each block DMAs its (b+2d)^3 window once.
+        xp = jnp.pad(x, [(0, 0)] + [(dilation, dilation)] * 3 + [(0, 0)])
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+        args = [xp]
+        size = block + 2 * dilation
+        scratch = [
+            pltpu.VMEM((size, size, size, Cin), x.dtype),
+            pltpu.SemaphoreType.DMA,
+        ]
+        kernel = functools.partial(
+            _halo_kernel, dilation=dilation, block=block, fuse_affine=fuse_affine
+        )
+    else:
+        # One extra block of zero padding per side supplies the halo.
+        xp = jnp.pad(x, [(0, 0)] + [(block, block)] * 3 + [(0, 0)])
+        blk = (1, block, block, block, Cin)
+
+        def mk_index(dz, dy, dx):
+            return lambda bi, zi, yi, xi: (bi, zi + dz, yi + dy, xi + dx, 0)
+
+        in_specs = [
+            pl.BlockSpec(blk, mk_index(dz, dy, dx))
+            for dz in range(3)
+            for dy in range(3)
+            for dx in range(3)
+        ]
+        args = [xp] * 27
+        scratch = []
+        kernel = functools.partial(
+            _views_kernel, dilation=dilation, block=block, fuse_affine=fuse_affine
+        )
+
+    in_specs.append(pl.BlockSpec(w.shape, lambda *_: (0,) * 5))  # weights
+    in_specs.append(pl.BlockSpec(b.shape, lambda *_: (0,)))  # bias
+    args += [w, b]
+    if fuse_affine:
+        in_specs.append(pl.BlockSpec(scale.shape, lambda *_: (0,)))
+        in_specs.append(pl.BlockSpec(offset.shape, lambda *_: (0,)))
+        args += [scale, offset]
+
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((B, D, H, W, Cout), x.dtype),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*args)
 
 
-def vmem_bytes(block: int, cin: int, cout: int, dtype_bytes: int = 4) -> int:
-    """Estimated VMEM working set: 27 input views + weights + out block."""
-    inp = 27 * block**3 * cin * dtype_bytes
-    out = block**3 * cout * 4  # f32 accumulator
+def vmem_bytes(
+    block: int,
+    cin: int,
+    cout: int,
+    dilation: int = 16,
+    dtype_bytes: int = 4,
+    variant: str = "halo",
+) -> int:
+    """Exact VMEM working set of one grid step, bytes.
+
+    ``halo``: the (block+2d)^3 DMA'd window + f32 accumulator + output
+    block + weights. ``views``: the 27 streamed views *plus* the assembled
+    (3*block)^3 neighbourhood buffer the original estimate omitted (it
+    undercounted the working set ~2x), + accumulator + output + weights.
+    """
+    acc = block**3 * cout * 4  # f32 accumulator
+    out = block**3 * cout * dtype_bytes
     wgt = 27 * cin * cout * dtype_bytes
-    return inp + out + wgt
+    if variant == "halo":
+        inp = (block + 2 * dilation) ** 3 * cin * dtype_bytes
+    else:
+        views = 27 * block**3 * cin * dtype_bytes
+        assembled = (3 * block) ** 3 * cin * dtype_bytes
+        inp = views + assembled
+    return inp + acc + out + wgt
+
+
+def suggest_block(
+    cin: int,
+    cout: int,
+    dilation: int,
+    dtype_bytes: int = 4,
+    variant: str = "halo",
+    budget: int = VMEM_BUDGET,
+) -> int | None:
+    """Largest block (multiple of 8, >= dilation) whose working set fits."""
+    for cand in (64, 56, 48, 40, 32, 24, 16, 8):
+        if cand < dilation:
+            break
+        if vmem_bytes(cand, cin, cout, dilation, dtype_bytes, variant) <= budget:
+            return cand
+    return None
+
+
+def check_vmem(
+    block: int,
+    cin: int,
+    cout: int,
+    dilation: int,
+    dtype_bytes: int = 4,
+    variant: str = "halo",
+    budget: int = VMEM_BUDGET,
+) -> int:
+    """Raise (with a suggested smaller block) before a pallas_call that
+    would exceed the ~16 MB VMEM budget; returns the priced working set."""
+    need = vmem_bytes(block, cin, cout, dilation, dtype_bytes, variant)
+    if need > budget:
+        hint = suggest_block(cin, cout, dilation, dtype_bytes, variant, budget)
+        fix = f"try block={hint}" if hint else "no block fits; shard channels"
+        raise ValueError(
+            f"dilated_conv3d[{variant}] block={block} cin={cin} cout={cout} "
+            f"dilation={dilation} needs {need / 2**20:.1f} MiB of VMEM, over "
+            f"the {budget / 2**20:.0f} MiB budget — {fix}"
+        )
+    return need

@@ -1,0 +1,534 @@
+"""Depth-first tiled MeshNet megakernel — the whole stack per VMEM tile.
+
+The per-layer fused kernel (kernels/dilated_conv3d.py) still writes and
+re-reads the full activation volume once per layer, so a 9-layer MeshNet
+forward moves ~10 full volumes of HBM traffic even with a perfect conv.
+This module inverts the loop order: instead of *breadth-first* (each layer
+over the whole volume), it runs *depth-first* — partition the output into
+tiles, and for each tile run **all** hidden layers back-to-back inside a
+single ``pallas_call``, keeping the activation tile in VMEM across layers.
+Each tile loads its haloed input region once (halo inflated by the sum of
+the 3^3 dilations it crosses, so the final tile is exact), and hidden
+activations never touch HBM at all. The 1x1x1 classifier head folds into
+the last call, so a whole forward is: read the haloed input tiles, write
+the logits. See DESIGN.md §2 (depth-first tiling & HBM traffic model) and
+EXPERIMENTS.md §Perf H9.
+
+Exactness (including the volume boundary)
+-----------------------------------------
+A window that zero-pads only at its own edge diverges from the full-volume
+forward near the *volume* boundary, because 'same' convs re-introduce zero
+padding at every layer (the sub-volume accuracy loss characterised in
+core/patching.py). The megakernel does not inherit that loss: after the
+haloed DMA and after every in-tile layer, positions outside the true
+volume are masked back to zero, reproducing per-layer 'same' padding
+bit-for-bit — the same trick as core/spatial_shard.py's halo exchange,
+applied inside VMEM. This also means the HBM staging buffers between
+segments can carry uninitialised (never-written) halo borders: whatever
+garbage they hold is masked out at the next DMA, so no staging pad copies
+are needed.
+
+Segmentation — the overlap-add fallback
+---------------------------------------
+The full schedule's halo (sum(1,2,4,8,16,8,4,2,1) = 46 per side) inflates
+a tile's working set past the ~16 MB VMEM budget for realistic channel
+widths, so ``plan`` splits the layer stack into consecutive *segments*,
+each run depth-first with its own (smaller) halo, with one full activation
+round-trip between segments — the cheap end of the overlap-add spectrum:
+one segment per layer degenerates to the per-layer fused path; one segment
+for the whole stack is the pure megakernel. The planner chooses segment
+boundaries and per-axis tile shapes by dynamic programming over the
+modeled HBM traffic, subject to ``_segment_vmem_bytes`` staying under the
+budget (tiles need not be cubes: the d=16 layer fits best as e.g.
+24x64x64). ``MegakernelPlan.hbm_bytes`` is the traffic model the
+benchmarks and telemetry report (telemetry/traffic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Default planning budget: 16 MiB VMEM per core minus Mosaic headroom.
+VMEM_BUDGET = 14 * 1024 * 1024
+
+#: Per-axis tile-size candidates (sublane-friendly multiples of 8).
+TILE_CANDIDATES = (8, 16, 24, 32, 48, 64, 96, 128, 256)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A consecutive run of hidden layers executed depth-first per tile."""
+
+    start: int  # index of the first layer in cfg.dilations
+    dilations: tuple[int, ...]
+    cin: int  # input channels (in_channels for the first segment)
+    channels: int  # hidden width C
+    tile: tuple[int, int, int]
+    fuse_head: bool = False  # apply the 1x1x1 head after the last layer
+    num_classes: int = 0
+
+    @property
+    def halo(self) -> int:
+        return sum(self.dilations)
+
+    @property
+    def cout(self) -> int:
+        return self.num_classes if self.fuse_head else self.channels
+
+    def buffer_sizes(self) -> list[tuple[int, int, int]]:
+        """Per-layer valid-region sizes: S_0 = tile + 2*halo shrinking by
+        2*d per layer down to S_k = tile exactly."""
+        sizes = [tuple(t + 2 * self.halo for t in self.tile)]
+        for d in self.dilations:
+            sizes.append(tuple(s - 2 * d for s in sizes[-1]))
+        assert sizes[-1] == self.tile, (sizes, self)
+        return sizes
+
+
+def _segment_vmem_bytes(seg: Segment, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step: the statically allocated scratch
+    (DMA'd input buffer + ping/pong activation buffers + logits staging
+    when the head is fused + weights) **plus** the transient f32
+    accumulator of the widest layer — scratch lives for the whole kernel,
+    and the tap loop's ``acc`` is live alongside it, so omitting it would
+    admit plans that exceed real VMEM (the tap reads themselves stream
+    from the resident buffers and need no second copy)."""
+    sizes = seg.buffer_sizes()
+    buf_in = math.prod(sizes[0]) * seg.cin * dtype_bytes
+    ping = max(math.prod(s) for s in sizes[1::2]) * seg.channels * dtype_bytes
+    pong = (
+        max(math.prod(s) for s in sizes[2::2]) * seg.channels * dtype_bytes
+        if len(sizes) > 2
+        else 0
+    )
+    wgt = 27 * seg.cin * seg.channels * dtype_bytes
+    wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
+    logits = (
+        math.prod(seg.tile) * seg.num_classes * dtype_bytes if seg.fuse_head else 0
+    )
+    acc = max(math.prod(s) for s in sizes[1:]) * seg.channels * 4  # f32
+    if seg.fuse_head:
+        acc = max(acc, math.prod(seg.tile) * seg.num_classes * 4)
+    return buf_in + ping + pong + wgt + logits + acc
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelPlan:
+    """Static execution plan: segments + geometry for one (cfg, volume)."""
+
+    segments: tuple[Segment, ...]
+    vol: tuple[int, int, int]  # true volume dims (pre-padding)
+    vmem_budget: int
+
+    def padded(self, seg: Segment) -> tuple[int, int, int]:
+        """Tile-multiple dims of the region this segment computes."""
+        return tuple(_ceil_to(v, t) for v, t in zip(self.vol, seg.tile))
+
+    def out_dims(self, i: int) -> tuple[int, int, int]:
+        """Spatial dims of segment i's HBM output array. Sized for the
+        *next* segment's haloed DMA windows: max of both segments' padded
+        extents plus the next halo per side (the halo border is never
+        written — its garbage is masked out after the next DMA)."""
+        cur = self.padded(self.segments[i])
+        if i + 1 == len(self.segments):
+            return cur
+        nxt = self.segments[i + 1]
+        pad = self.padded(nxt)
+        return tuple(max(c, p) + 2 * nxt.halo for c, p in zip(cur, pad))
+
+    def hbm_bytes(self, batch: int = 1, dtype_bytes: int = 4) -> int:
+        """Modeled HBM traffic of one forward: the input pad round-trip,
+        then per segment the haloed tile reads, the weight streams, and the
+        central-region writes (staging halo borders are allocated but never
+        written, so they cost nothing)."""
+        total = 0
+        first = self.segments[0]
+        p0 = self.padded(first)
+        # host-side zero-pad of the raw input (read + padded write)
+        total += math.prod(self.vol) * first.cin * dtype_bytes
+        total += math.prod(t + 2 * first.halo for t in p0) * first.cin * dtype_bytes
+        for i, seg in enumerate(self.segments):
+            p = self.padded(seg)
+            ntiles = math.prod(pp // t for pp, t in zip(p, seg.tile))
+            window = math.prod(t + 2 * seg.halo for t in seg.tile)
+            wgt = 27 * seg.cin * seg.channels * dtype_bytes
+            wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
+            if seg.fuse_head:
+                wgt += seg.channels * seg.num_classes * dtype_bytes
+            total += ntiles * (window * seg.cin * dtype_bytes + wgt)
+            total += math.prod(p) * seg.cout * dtype_bytes
+        return batch * total
+
+
+def plan(
+    dilations: Sequence[int],
+    in_channels: int,
+    channels: int,
+    num_classes: int,
+    vol: tuple[int, int, int],
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+    dtype_bytes: int = 4,
+) -> MegakernelPlan:
+    """Choose segment boundaries and per-axis tiles by DP over modeled
+    HBM traffic, subject to each segment's working set fitting VMEM.
+
+    Raises with an actionable message when even a single layer at the
+    smallest tile exceeds the budget (channel width is the only lever
+    left at that point). Memoized: the DP costs ~0.4 s in Python at the
+    paper volume, and the serving path replans the same (model, volume)
+    on every request ("auto" resolution, traffic telemetry, the forward
+    itself).
+    """
+    return _plan_cached(
+        tuple(int(d) for d in dilations),
+        int(in_channels),
+        int(channels),
+        int(num_classes),
+        tuple(int(v) for v in vol),
+        int(vmem_budget),
+        int(dtype_bytes),
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_cached(
+    dils: tuple[int, ...],
+    in_channels: int,
+    channels: int,
+    num_classes: int,
+    vol: tuple[int, int, int],
+    vmem_budget: int,
+    dtype_bytes: int,
+) -> MegakernelPlan:
+    n = len(dils)
+    # Oversize tiles only waste padding: cap candidates near the volume.
+    cands = [
+        [t for t in TILE_CANDIDATES if t <= _ceil_to(v, 8)] or [8] for v in vol
+    ]
+    tiles = [
+        (tz, ty, tx) for tz in cands[0] for ty in cands[1] for tx in cands[2]
+    ]
+
+    def seg_for(i: int, j: int, tile) -> Segment:
+        return Segment(
+            start=i,
+            dilations=dils[i:j],
+            cin=in_channels if i == 0 else channels,
+            channels=channels,
+            tile=tile,
+            fuse_head=(j == n),
+            num_classes=num_classes,
+        )
+
+    def traffic(seg: Segment, plan_: MegakernelPlan) -> int:
+        p = plan_.padded(seg)
+        ntiles = math.prod(pp // t for pp, t in zip(p, seg.tile))
+        window = math.prod(t + 2 * seg.halo for t in seg.tile)
+        rd = ntiles * window * seg.cin * dtype_bytes
+        wr = math.prod(p) * seg.cout * dtype_bytes
+        pad = 0
+        if seg.start == 0:
+            pad = math.prod(vol) * seg.cin * dtype_bytes
+            pad += math.prod(t + 2 * seg.halo for t in p) * seg.cin * dtype_bytes
+        return pad + rd + wr
+
+    probe = MegakernelPlan(segments=(), vol=vol, vmem_budget=vmem_budget)
+    INF = float("inf")
+    best: list[float] = [INF] * (n + 1)
+    best[n] = 0.0
+    choice: list[tuple[int, tuple[int, int, int]] | None] = [None] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        for j in range(i + 1, n + 1):
+            for tile in tiles:
+                seg = seg_for(i, j, tile)
+                if _segment_vmem_bytes(seg, dtype_bytes) > vmem_budget:
+                    continue
+                cost = traffic(seg, probe) + best[j]
+                if cost < best[i]:
+                    best[i] = cost
+                    choice[i] = (j, tile)
+    if best[0] == INF:
+        one = seg_for(0, 1, (8, 8, 8))
+        raise ValueError(
+            f"megakernel plan infeasible: one layer at tile (8,8,8) needs "
+            f"{_segment_vmem_bytes(one, dtype_bytes) / 2**20:.1f} MiB of VMEM, "
+            f"over the {vmem_budget / 2**20:.0f} MiB budget — reduce channel "
+            f"width ({channels}) or raise vmem_budget"
+        )
+    segments = []
+    i = 0
+    while i < n:
+        j, tile = choice[i]  # type: ignore[misc]
+        segments.append(seg_for(i, j, tile))
+        i = j
+    return MegakernelPlan(segments=tuple(segments), vol=vol, vmem_budget=vmem_budget)
+
+
+def plan_for_config(
+    cfg, vol: tuple[int, int, int], *, vmem_budget: int = VMEM_BUDGET, dtype_bytes: int = 4
+) -> MegakernelPlan:
+    """``plan`` from a MeshNetConfig-shaped object."""
+    return plan(
+        cfg.dilations,
+        cfg.in_channels,
+        cfg.channels,
+        cfg.num_classes,
+        vol,
+        vmem_budget=vmem_budget,
+        dtype_bytes=dtype_bytes,
+    )
+
+
+def _segment_kernel(
+    *refs,
+    seg: Segment,
+    vol: tuple[int, int, int],
+    out_halo: int,
+    use_affine: bool,
+):
+    """Kernel body: DMA the haloed input window, run ``seg``'s layers
+    back-to-back in VMEM (masking out-of-volume positions after every
+    layer so per-layer 'same' zero padding is reproduced exactly), then
+    DMA the finished tile (or fused-head logits) back out."""
+    k = len(seg.dilations)
+    per_layer = 4 if use_affine else 2
+    n_in = 1 + k * per_layer + (2 if seg.fuse_head else 0)
+    x_ref = refs[0]
+    layer_refs = [
+        refs[1 + i * per_layer : 1 + (i + 1) * per_layer] for i in range(k)
+    ]
+    head_refs = refs[1 + k * per_layer : n_in] if seg.fuse_head else None
+    out_ref = refs[n_in]
+    scratch = refs[n_in + 1 :]
+    buf_in, ping = scratch[0], scratch[1]
+    idx = 2
+    pong = scratch[idx] if k >= 2 else None
+    idx += 1 if k >= 2 else 0
+    logits_buf = scratch[idx] if seg.fuse_head else None
+    idx += 1 if seg.fuse_head else 0
+    sem = scratch[idx]
+
+    bi, zi, yi, xi = (pl.program_id(i) for i in range(4))
+    ids = (zi, yi, xi)
+    tile = seg.tile
+    h = seg.halo
+    sizes = seg.buffer_sizes()
+
+    dma = pltpu.make_async_copy(
+        x_ref.at[
+            bi,
+            pl.ds(zi * tile[0], sizes[0][0]),
+            pl.ds(yi * tile[1], sizes[0][1]),
+            pl.ds(xi * tile[2], sizes[0][2]),
+            :,
+        ],
+        buf_in,
+        sem.at[0],
+    )
+    dma.start()
+    dma.wait()
+
+    def mask(v, size, r):
+        """Zero positions whose global coord (tile origin - r + local) lies
+        outside the true volume — per-layer 'same' padding, and the
+        neutraliser for the staging arrays' unwritten halo borders."""
+        ok = None
+        for ax in range(3):
+            i = jax.lax.broadcasted_iota(jnp.int32, size + (1,), ax)
+            lo = r - ids[ax] * tile[ax]
+            m = (i >= lo) & (i < vol[ax] + lo)
+            ok = m if ok is None else (ok & m)
+        return jnp.where(ok, v, jnp.zeros((), v.dtype))
+
+    buf_in[...] = mask(buf_in[...], sizes[0], h)
+
+    prev, prev_size = buf_in, sizes[0]
+    cum = 0
+    for li, d in enumerate(seg.dilations):
+        w_ref, b_ref = layer_refs[li][0], layer_refs[li][1]
+        size = sizes[li + 1]
+        cum += d
+        w = w_ref[...]
+        acc = jnp.zeros(size + (w.shape[-1],), jnp.float32)
+        for tz in (-1, 0, 1):
+            for ty in (-1, 0, 1):
+                for tx in (-1, 0, 1):
+                    sl = prev[
+                        d + tz * d : d + tz * d + size[0],
+                        d + ty * d : d + ty * d + size[1],
+                        d + tx * d : d + tx * d + size[2],
+                        :,
+                    ]
+                    acc = acc + jnp.einsum(
+                        "zyxi,io->zyxo",
+                        sl.astype(jnp.float32),
+                        w[tz + 1, ty + 1, tx + 1].astype(jnp.float32),
+                        preferred_element_type=jnp.float32,
+                    )
+        out = acc + b_ref[...].astype(jnp.float32)
+        if use_affine:
+            s_ref, o_ref = layer_refs[li][2], layer_refs[li][3]
+            out = out * s_ref[...].astype(jnp.float32) + o_ref[...].astype(
+                jnp.float32
+            )
+        out = jnp.maximum(out, 0.0)
+        if li + 1 < k:
+            out = mask(out, size, h - cum)
+        dst = ping if li % 2 == 0 else pong
+        dst[0 : size[0], 0 : size[1], 0 : size[2], :] = out.astype(dst.dtype)
+        prev, prev_size = dst, size
+
+    if seg.fuse_head:
+        hw_ref, hb_ref = head_refs
+        x = prev[0 : tile[0], 0 : tile[1], 0 : tile[2], :]
+        logits = (
+            jnp.einsum(
+                "zyxi,io->zyxo",
+                x.astype(jnp.float32),
+                hw_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            + hb_ref[...].astype(jnp.float32)
+        )
+        logits_buf[...] = logits.astype(logits_buf.dtype)
+        src = logits_buf
+    else:
+        src = prev.at[
+            pl.ds(0, tile[0]), pl.ds(0, tile[1]), pl.ds(0, tile[2]), :
+        ]
+    odma = pltpu.make_async_copy(
+        src,
+        out_ref.at[
+            bi,
+            pl.ds(out_halo + zi * tile[0], tile[0]),
+            pl.ds(out_halo + yi * tile[1], tile[1]),
+            pl.ds(out_halo + xi * tile[2], tile[2]),
+            :,
+        ],
+        sem.at[1],
+    )
+    odma.start()
+    odma.wait()
+
+
+def _run_segment(
+    act: jax.Array,
+    seg: Segment,
+    pln: MegakernelPlan,
+    i: int,
+    params: dict,
+    use_affine: bool,
+    fold_affine,
+    interpret: bool,
+) -> jax.Array:
+    B = act.shape[0]
+    padded = pln.padded(seg)
+    out_dims = pln.out_dims(i)
+    out_halo = (
+        pln.segments[i + 1].halo if i + 1 < len(pln.segments) else 0
+    )
+
+    args = [act]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+
+    def add_full(a):
+        args.append(a)
+        in_specs.append(pl.BlockSpec(a.shape, lambda *_, n=a.ndim: (0,) * n))
+
+    for li in range(len(seg.dilations)):
+        layer = params["layers"][seg.start + li]
+        add_full(layer["w"])
+        add_full(layer["b"])
+        if use_affine:
+            scale, offset = fold_affine(layer)
+            add_full(scale)
+            add_full(offset)
+    if seg.fuse_head:
+        add_full(params["head"]["w"][0, 0, 0])  # (C, num_classes)
+        add_full(params["head"]["b"])
+
+    sizes = seg.buffer_sizes()
+    scratch = [
+        pltpu.VMEM(sizes[0] + (seg.cin,), act.dtype),
+        pltpu.VMEM(sizes[1] + (seg.channels,), act.dtype),
+    ]
+    if len(seg.dilations) >= 2:
+        scratch.append(pltpu.VMEM(sizes[2] + (seg.channels,), act.dtype))
+    if seg.fuse_head:
+        scratch.append(pltpu.VMEM(seg.tile + (seg.num_classes,), act.dtype))
+    scratch.append(pltpu.SemaphoreType.DMA((2,)))
+
+    kernel = functools.partial(
+        _segment_kernel,
+        seg=seg,
+        vol=pln.vol,
+        out_halo=out_halo,
+        use_affine=use_affine,
+    )
+    grid = (B,) + tuple(p // t for p, t in zip(padded, seg.tile))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((B,) + out_dims + (seg.cout,), act.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*args)
+
+
+def meshnet_apply(
+    params,
+    x: jax.Array,
+    cfg,
+    *,
+    pln: MegakernelPlan | None = None,
+    vmem_budget: int = VMEM_BUDGET,
+    interpret: bool = True,
+    fold_affine=None,
+) -> jax.Array:
+    """Depth-first MeshNet forward (== meshnet.apply, eval mode).
+
+    ``fold_affine`` maps a layer dict to the folded inference-BN
+    (scale, offset); ops.meshnet_apply_megakernel supplies it (kept
+    injectable so this module does not import ops).
+    """
+    if x.ndim == 4:
+        x = x[..., None]
+    B, D, H, W, Cin = x.shape
+    vol = (D, H, W)
+    if pln is None:
+        pln = plan_for_config(
+            cfg, vol, vmem_budget=vmem_budget, dtype_bytes=x.dtype.itemsize
+        )
+    use_affine = bool(cfg.use_batchnorm)
+    if use_affine and fold_affine is None:
+        raise ValueError("fold_affine is required when cfg.use_batchnorm")
+
+    first = pln.segments[0]
+    p0 = pln.padded(first)
+    h0 = first.halo
+    act = jnp.pad(
+        x,
+        [(0, 0)]
+        + [(h0, h0 + p - v) for p, v in zip(p0, vol)]
+        + [(0, 0)],
+    )
+    for i, seg in enumerate(pln.segments):
+        act = _run_segment(
+            act, seg, pln, i, params, use_affine, fold_affine, interpret
+        )
+    return act[:, :D, :H, :W, :]

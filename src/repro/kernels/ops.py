@@ -6,11 +6,13 @@ multiples + slice back), dtype policy, BatchNorm folding, backend dispatch
 forward pass (`meshnet_apply`) that fuses conv+BN+ReLU per layer.
 
 ``meshnet_apply`` is the "pallas_fused" backend of the executor registry
-(core/executors.py) — the pipeline's production path on TPU, selected by
-``PipelineConfig(executor="pallas_fused")`` (or "auto" on a TPU host) and
+(core/executors.py); ``meshnet_apply_megakernel`` is the depth-first
+"pallas_megakernel" backend (kernels/megakernel.py) — the pipeline's
+production path on TPU when the tile plan fits VMEM ("auto" prefers it),
 benchmarked head-to-head against the XLA reference in
 benchmarks/bench_kernels.py. Parity with ``meshnet.apply`` (eval mode) is
-enforced by tests/test_executors.py across the PAPER_MODELS sweep.
+enforced by tests/test_executors.py and tests/test_megakernel.py across
+the PAPER_MODELS sweep.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.kernels import dice as dice_kernel
 from repro.kernels import dilated_conv3d as conv_kernel
+from repro.kernels import megakernel as mega_kernel
 
 # interpret=True on CPU (this container); compiled Mosaic on real TPU.
 _INTERPRET = jax.default_backend() != "tpu"
@@ -91,6 +94,32 @@ def meshnet_apply(params, x: jax.Array, cfg, *, block: int = 16, interpret: bool
     head = params["head"]
     # 1x1x1 head: a plain einsum (pointwise) — no spatial kernel needed.
     return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+
+
+def meshnet_apply_megakernel(
+    params,
+    x: jax.Array,
+    cfg,
+    *,
+    vmem_budget: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Depth-first tiled MeshNet forward (== meshnet.apply, eval mode).
+
+    The whole hidden stack (and the 1x1x1 head) runs per VMEM-resident
+    tile inside a handful of ``pallas_call``s — hidden activations never
+    round-trip HBM within a segment (kernels/megakernel.py, EXPERIMENTS.md
+    §Perf H9). The "pallas_megakernel" backend of the executor registry.
+    """
+    interpret = _INTERPRET if interpret is None else interpret
+    return mega_kernel.meshnet_apply(
+        params,
+        x,
+        cfg,
+        vmem_budget=vmem_budget or mega_kernel.VMEM_BUDGET,
+        interpret=interpret,
+        fold_affine=fold_batchnorm if cfg.use_batchnorm else None,
+    )
 
 
 def dice(pred: jax.Array, truth: jax.Array, num_classes: int, *, interpret: bool | None = None) -> jax.Array:

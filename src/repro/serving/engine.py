@@ -9,11 +9,14 @@ pipeline (conform -> crop -> MeshNet -> components), with the memory-budget
 guard choosing full-volume vs failsafe sub-volume mode per request —
 exactly the tool's client-side adaptation logic, server-side. Inference
 dispatches through the executor registry (core/executors.py): the engine's
-PipelineConfig carries a default backend ("auto" -> fused Pallas on TPU,
-XLA on CPU), and both ``submit`` and the batched ``submit_many`` accept
-per-request mode/executor overrides; the chosen pair is recorded in each
-request's telemetry record. Requests sharing a (mode, executor, shape)
-reuse one compiled executable via the registry's jit cache.
+PipelineConfig carries a default backend ("auto" -> the depth-first
+megakernel on TPU when its tile plan fits VMEM, else fused Pallas; XLA on
+CPU), and both ``submit`` and the batched ``submit_many`` accept
+per-request mode/executor overrides; the chosen pair — plus the modeled
+HBM bytes the backend's schedule moves (telemetry/traffic.py) — is
+recorded in each request's telemetry record. Requests sharing a (mode,
+executor, shape) reuse one compiled executable via the registry's jit
+cache.
 
 LMEngine — continuous-batching text generation for any ModelConfig:
 chunked prefill (sequence patching, DESIGN.md §4), ring-buffer KV caches

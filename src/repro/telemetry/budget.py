@@ -17,8 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import TYPE_CHECKING
 
-from repro.core.meshnet import MeshNetConfig
+if TYPE_CHECKING:  # annotation-only: a runtime import would cycle back
+    # through repro.core (core.pipeline imports this module).
+    from repro.core.meshnet import MeshNetConfig
 
 # Browser-era texture sizes map to working-set budgets; TPU-era ladder:
 V5E_HBM_BYTES = 16 * 1024**3  # 16 GB HBM per v5e chip

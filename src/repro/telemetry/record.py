@@ -40,9 +40,13 @@ class TelemetryRecord:
     status: str  # ok | fail
     times: StageTimes
     # which forward backend ran (core/executors.py): xla | pallas_fused |
-    # streaming — the server-side analogue of the paper logging the WebGL
-    # vs WASM backend per run.
+    # pallas_megakernel | streaming — the server-side analogue of the paper
+    # logging the WebGL vs WASM backend per run.
     executor: Optional[str] = None
+    # modeled HBM bytes the executor's schedule moves for this run's
+    # inference (telemetry/traffic.py) — the TPU analogue of the paper
+    # tracking texture bandwidth per backend.
+    hbm_bytes_modeled: Optional[int] = None
     fail_type: Optional[str] = None
     crop_size: Optional[tuple] = None
     # device context (the simulator's stand-ins for GPU card / texture size)

@@ -1,0 +1,188 @@
+"""Modeled HBM bytes per MeshNet forward, per executor backend.
+
+The TPU analogue of Brainchop's texture-bandwidth cost model: every
+executor's schedule implies a deterministic amount of HBM traffic, and —
+because MeshNet's narrow models are memory-bound (DESIGN.md §2) — that
+byte count *is* the performance model. These functions price it
+analytically (bytes, not wall-clock), the same methodology as the memory
+budget model in telemetry/budget.py: the numbers drive the DESIGN.md §2
+traffic table, the ``traffic`` benchmark section, the ``BENCH_2.json``
+perf trajectory, and the per-run ``hbm_bytes_modeled`` telemetry field.
+
+Modeling conventions (counted per forward, ``dtype_bytes`` per element):
+  * every XLA op materialises its output: a pad is a read + padded write,
+    an elementwise stage is a read + write round-trip;
+  * a Pallas grid step re-fetches each of its input blocks — consecutive
+    steps share nothing, so per-step window bytes multiply by the step
+    count (this is what makes the 27-view schedule 27x and a haloed
+    window ((b+2d)/b)^3 x);
+  * weights are streamed once per grid step (tiny for MeshNet, but
+    counted — at 16^3 benchmark volumes they are not negligible);
+  * scratch/VMEM traffic is free; only HBM crossings count.
+
+The pluggable executor registry wires these to its specs
+(``core/executors.py``), so ``pipeline.run`` records bytes for whichever
+backend served a request without knowing how it is scheduled.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.kernels import megakernel
+
+Shape3 = Sequence[int]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _vox(shape: Shape3) -> int:
+    return math.prod(int(s) for s in shape)
+
+
+def meshnet_xla_bytes(cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4) -> int:
+    """Reference XLA graph: each layer is conv -> BN -> ReLU, three
+    materialised stages (the "three HBM round-trips per layer" the fused
+    path collapses, EXPERIMENTS.md §Perf H1). Conv itself is modeled at
+    its traffic floor (read once, write once) — generous to XLA."""
+    v = _vox(vol)
+    total = 0
+    cin = cfg.in_channels
+    c = cfg.channels
+    stages = 3 if cfg.use_batchnorm else 2  # conv, (bn,) relu
+    for _ in cfg.dilations:
+        total += v * (cin + c) * dtype_bytes  # conv read + write
+        total += (stages - 1) * 2 * v * c * dtype_bytes  # bn/relu round-trips
+        total += 27 * cin * c * dtype_bytes
+        cin = c
+    total += v * (c + cfg.num_classes) * dtype_bytes  # 1x1x1 head
+    return batch * total
+
+
+def dilated_conv_layer_bytes(
+    vol: Shape3,
+    cin: int,
+    cout: int,
+    dilation: int,
+    block: int = 16,
+    dtype_bytes: int = 4,
+) -> int:
+    """One fused haloed-load conv call (kernels/dilated_conv3d.py, variant
+    "halo"): the d-halo pad round-trip, one (block+2d)^3 window DMA per
+    output block (+ the streamed weights), and the fused write. The
+    per-layer term of ``meshnet_fused_bytes``; the kernels benchmark
+    prices single conv rows with it."""
+    p = [_ceil_to(v, block) for v in vol]
+    ntiles = math.prod(pp // block for pp in p)
+    total = _vox(vol) * cin * dtype_bytes  # halo pad read...
+    total += math.prod(pp + 2 * dilation for pp in p) * cin * dtype_bytes  # + write
+    window = (block + 2 * dilation) ** 3
+    wgt = 27 * cin * cout * dtype_bytes
+    total += ntiles * (window * cin * dtype_bytes + wgt)
+    total += math.prod(p) * cout * dtype_bytes  # fused conv+BN+ReLU write
+    return total
+
+
+def meshnet_fused_bytes(
+    cfg, vol: Shape3, batch: int = 1, block: int = 16, dtype_bytes: int = 4
+) -> int:
+    """Per-layer fused Pallas path (ops.meshnet_apply): one
+    ``dilated_conv_layer_bytes`` term per layer, then the head einsum."""
+    total = 0
+    cin = cfg.in_channels
+    c = cfg.channels
+    for d in cfg.dilations:
+        total += dilated_conv_layer_bytes(vol, cin, c, d, block, dtype_bytes)
+        cin = c
+    total += _vox(vol) * (c + cfg.num_classes) * dtype_bytes  # head einsum
+    return batch * total
+
+
+def meshnet_views_bytes(
+    cfg, vol: Shape3, batch: int = 1, block: int = 16, dtype_bytes: int = 4
+) -> int:
+    """The pre-halo-load 27-view schedule (variant="views"): every grid
+    step streams 27 full blocks regardless of dilation — the ~28x-off
+    baseline the haloed load replaced (DESIGN.md §2)."""
+    total = 0
+    cin = cfg.in_channels
+    c = cfg.channels
+    for _ in cfg.dilations:
+        p = [_ceil_to(v, block) for v in vol]
+        ntiles = math.prod(pp // block for pp in p)
+        total += _vox(vol) * cin * dtype_bytes  # block-halo pad read
+        total += math.prod(pp + 2 * block for pp in p) * cin * dtype_bytes
+        wgt = 27 * cin * c * dtype_bytes
+        total += ntiles * (27 * block**3 * cin * dtype_bytes + wgt)
+        total += math.prod(p) * c * dtype_bytes
+        cin = c
+    total += _vox(vol) * (c + cfg.num_classes) * dtype_bytes
+    return batch * total
+
+
+def meshnet_streaming_bytes(
+    cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4
+) -> int:
+    """Scan-over-layers schedule (core/streaming.py): a memory-floor
+    path, not a traffic-optimal one — each scanned layer pads the carry
+    by the max dilation and gathers 27 dynamic-slice taps, each tap a
+    read + accumulator round-trip."""
+    v = _vox(vol)
+    dmax = max(cfg.dilations)
+    vp = math.prod(int(s) + 2 * dmax for s in vol)
+    total = 0
+    cin = cfg.in_channels
+    c = cfg.channels
+    for i, _ in enumerate(cfg.dilations):
+        if i == 0:
+            # first layer runs unstacked, as the plain XLA block
+            stages = 3 if cfg.use_batchnorm else 2
+            total += v * (cin + c) * dtype_bytes
+            total += (stages - 1) * 2 * v * c * dtype_bytes
+        else:
+            total += v * c * dtype_bytes + vp * c * dtype_bytes  # pad carry
+            total += 27 * (vp + 2 * v) * c * dtype_bytes  # taps + acc r/w
+            total += 2 * v * c * dtype_bytes  # bn+relu epilogue
+        total += 27 * cin * c * dtype_bytes
+        cin = c
+    total += v * (c + cfg.num_classes) * dtype_bytes
+    return batch * total
+
+
+def meshnet_megakernel_bytes(
+    cfg,
+    vol: Shape3,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+    vmem_budget: int | None = None,
+) -> int:
+    """Depth-first tiled megakernel: the planner's own traffic model
+    (kernels/megakernel.py) — haloed tile reads per segment, one logits
+    write, zero intra-segment activation traffic."""
+    pln = megakernel.plan_for_config(
+        cfg,
+        tuple(int(s) for s in vol),
+        vmem_budget=vmem_budget or megakernel.VMEM_BUDGET,
+        dtype_bytes=dtype_bytes,
+    )
+    return pln.hbm_bytes(batch=batch, dtype_bytes=dtype_bytes)
+
+
+#: executor name -> modeled-bytes fn, the mapping the registry wires up.
+EXECUTOR_MODELS = {
+    "xla": meshnet_xla_bytes,
+    "pallas_fused": meshnet_fused_bytes,
+    "streaming": meshnet_streaming_bytes,
+    "pallas_megakernel": meshnet_megakernel_bytes,
+}
+
+
+def executor_hbm_bytes(
+    name: str, cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4
+) -> int | None:
+    """Modeled bytes for a registered executor, or None if unmodeled."""
+    fn = EXECUTOR_MODELS.get(name)
+    return None if fn is None else fn(cfg, vol, batch=batch, dtype_bytes=dtype_bytes)

@@ -44,7 +44,9 @@ def _parity(cfg: MeshNetConfig, shape=ODD_SHAPE, atol=2e-4, seed=3):
 
 class TestRegistry:
     def test_builtin_names(self):
-        assert {"xla", "pallas_fused", "streaming"} <= set(executors.names())
+        assert {"xla", "pallas_fused", "pallas_megakernel", "streaming"} <= set(
+            executors.names()
+        )
 
     def test_auto_resolves_to_registered_backend(self):
         assert executors.resolve("auto") in executors.names()
@@ -63,8 +65,31 @@ class TestRegistry:
             )
 
     def test_default_executor_matches_backend(self):
+        # Without a model to plan for: fused on TPU, xla on CPU hosts.
         want = "pallas_fused" if jax.default_backend() == "tpu" else "xla"
         assert executors.default_executor() == want
+        # With a plannable model, a TPU host prefers the megakernel; CPU
+        # hosts still serve with xla (interpret mode is a correctness path).
+        cfg = MeshNetConfig()
+        want = "pallas_megakernel" if jax.default_backend() == "tpu" else "xla"
+        assert executors.default_executor(cfg, (256, 256, 256)) == want
+        assert executors.resolve("auto", cfg, (256, 256, 256)) == want
+
+    def test_modeled_hbm_bytes_none_for_unmodeled_backend(self):
+        executors.register(
+            executors.ExecutorSpec(
+                name="_test_unmodeled",
+                apply=executors._xla_apply,
+                streaming_apply=executors._xla_apply,
+            )
+        )
+        try:
+            assert (
+                executors.modeled_hbm_bytes("_test_unmodeled", SMALL, (8, 8, 8))
+                is None
+            )
+        finally:
+            executors._REGISTRY.pop("_test_unmodeled")
 
     def test_list_dilations_config_crosses_jit_boundary(self):
         # cfg is a static jit argument in jitted_apply; list dilations must
@@ -123,7 +148,9 @@ class TestPipelineDispatch:
         vol, _ = mri.generate(KEY, mri.SyntheticMRIConfig(shape=(16, 16, 16)))
         return params, vol
 
-    @pytest.mark.parametrize("executor", ["xla", "pallas_fused", "streaming"])
+    @pytest.mark.parametrize(
+        "executor", ["xla", "pallas_fused", "pallas_megakernel", "streaming"]
+    )
     @pytest.mark.parametrize("mode", ["full", "subvolume", "streaming"])
     def test_all_modes_all_executors(self, mode, executor):
         params, vol = self._setup()
@@ -135,17 +162,19 @@ class TestPipelineDispatch:
         assert res.record.status == "ok", res.record.fail_type
         assert res.segmentation.shape == (16, 16, 16)
         assert res.record.executor == executor  # recorded in telemetry
+        assert res.record.hbm_bytes_modeled > 0  # bytes-moved telemetry
 
     def test_executors_agree_on_segmentation(self):
         params, vol = self._setup()
         segs = {}
-        for executor in ("xla", "pallas_fused"):
+        for executor in ("xla", "pallas_fused", "pallas_megakernel"):
             pc = PipelineConfig(
                 model=SMALL, volume_shape=(16, 16, 16), mode="full",
                 min_component_size=4, executor=executor,
             )
             segs[executor] = np.asarray(pipeline.run(pc, params, vol).segmentation)
         np.testing.assert_array_equal(segs["xla"], segs["pallas_fused"])
+        np.testing.assert_array_equal(segs["xla"], segs["pallas_megakernel"])
 
     def test_subvolume_executor_closure_matches_explicit_infer_fn(self):
         params, vol = self._setup()

@@ -95,6 +95,44 @@ class TestDilatedConv3D:
         assert conv_kernel.vmem_bytes(16, 5, 5) < 16 * 1024 * 1024
         assert conv_kernel.vmem_bytes(16, 21, 21) < 16 * 1024 * 1024
 
+    @pytest.mark.parametrize("dilation", [1, 4, 16])
+    @pytest.mark.parametrize("fuse", [False, True])
+    def test_haloed_load_bit_exact_vs_27_views(self, dilation, fuse):
+        # The single haloed DMA schedule must reproduce the legacy 27-view
+        # schedule bit-for-bit (identical tap order and accumulation).
+        x = _rand(KEY, (2, 16, 16, 16, 5), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 5, 5), jnp.float32) * 0.2
+        b = _rand(jax.random.PRNGKey(2), (5,), jnp.float32) * 0.1
+        kw = dict(dilation=dilation, interpret=True, fuse_affine=fuse)
+        if fuse:
+            kw.update(scale=jnp.asarray([1.5, 0.5, 2.0, 1.0, 0.1]),
+                      offset=jnp.asarray([0.1, -0.2, 0.0, 0.3, -0.1]))
+        halo = conv_kernel.dilated_conv3d(x, w, b, variant="halo", **kw)
+        views = conv_kernel.dilated_conv3d(x, w, b, variant="views", **kw)
+        np.testing.assert_array_equal(np.asarray(halo), np.asarray(views))
+
+    def test_vmem_bytes_views_counts_assembled_neighbourhood(self):
+        # The views schedule materialises a (3*block)^3 assembled buffer on
+        # top of the 27 streamed views; the estimate must include it (the
+        # original formula undercounted the working set ~2x).
+        views = conv_kernel.vmem_bytes(16, 5, 5, dilation=16, variant="views")
+        assert views >= (27 + 27) * 16**3 * 5 * 4
+        # ...and the haloed load's working set shrinks with the dilation.
+        assert conv_kernel.vmem_bytes(16, 5, 5, dilation=1, variant="halo") < \
+            conv_kernel.vmem_bytes(16, 5, 5, dilation=16, variant="halo") < views
+
+    def test_vmem_guard_raises_with_suggested_block(self):
+        with pytest.raises(ValueError, match=r"try block=\d+"):
+            conv_kernel.check_vmem(64, 21, 21, dilation=8)
+        assert conv_kernel.suggest_block(21, 21, dilation=8) == 32
+        # the guard fires from the kernel entrypoint too, pre-pallas_call
+        x = _rand(KEY, (1, 64, 64, 64, 21), jnp.float32)
+        w = _rand(jax.random.PRNGKey(1), (3, 3, 3, 21, 21), jnp.float32)
+        with pytest.raises(ValueError, match="VMEM"):
+            conv_kernel.dilated_conv3d(
+                x, w, jnp.zeros((21,)), dilation=8, block=64, interpret=True
+            )
+
 
 class TestDecodeAttentionKernel:
     @pytest.mark.parametrize(
