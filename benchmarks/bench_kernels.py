@@ -142,10 +142,27 @@ def bench_traffic(
             )
         )
         for exec_name in executors.names():
+            if exec_name.startswith(executors.SHARDED_PREFIX):
+                continue  # priced below at explicit slab counts
             hbm = executors.modeled_hbm_bytes(exec_name, cfg, vol)
             note = f"modeled at {side}^3 (no timing)"
             if exec_name == "pallas_megakernel" and hbm is not None:
                 fused = executors.modeled_hbm_bytes("pallas_fused", cfg, vol)
                 note += f"; {fused / hbm:.1f}x under pallas_fused"
             rows.append((f"hbm_{name}_{side}_{exec_name}", 0.0, hbm, note))
+        # the sharded family (DESIGN.md §2.2): per-device HBM shrinks with
+        # the slab count while the ICI halo bill grows one boundary at a
+        # time — both modeled, so this prices the paper volume anywhere.
+        for n in (2, 4, 8):
+            hbm = traffic.meshnet_sharded_bytes("pallas_megakernel", cfg, vol, n)
+            coll = traffic.meshnet_collective_bytes(cfg, vol, n)
+            rows.append(
+                (
+                    f"hbm_{name}_{side}_sharded_pallas_megakernel@{n}",
+                    0.0,
+                    hbm,
+                    f"modeled at {side}^3; per-device {hbm // n} HBM bytes, "
+                    f"{coll} ICI halo bytes total (EXPERIMENTS.md H10)",
+                )
+            )
     return rows

@@ -1,0 +1,160 @@
+"""Benchmark regression gate: fail CI when the fresh run regresses.
+
+Compares a fresh ``benchmarks.run --json-out`` trajectory against the
+committed baseline (``BENCH_2.json``) per (section, name) key and exits
+non-zero when any measured kernel regresses:
+
+  * ``us_per_call`` grows by more than ``--us-tol`` (default 25%, or the
+    ``BENCH_US_TOL`` env var) **after machine normalization**: the
+    committed baseline was produced on some developer machine, a CI
+    runner can easily be several times slower wholesale, so raw ratios
+    would fail every PR. Instead the *median* fresh/baseline ratio across
+    all timed keys is taken as the machine-speed factor, and a key fails
+    only when its own ratio exceeds the median by the tolerance — i.e.
+    when one kernel got slower *relative to the rest of the suite*. (A
+    uniform slowdown of every kernel is indistinguishable from a slower
+    machine by construction; the per-key gate is the one wall-clock claim
+    a shared runner can actually check.)
+  * ``hbm_bytes_modeled`` grows at all — no normalization: the traffic
+    models are analytic and deterministic, *any* growth is a real
+    schedule regression;
+  * a baseline key disappears (a benchmark silently dropped is a coverage
+    regression, not an improvement).
+
+New keys in the fresh run are reported but never fail — adding benchmarks
+must not require a two-step dance. A per-key delta table is always
+printed so the artifact log shows *what* moved, not just that something
+did.
+
+Usage:
+    python benchmarks/check_regression.py FRESH.json [--baseline BENCH_2.json]
+                                          [--us-tol 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise SystemExit(f"{path}: expected a section->rows mapping")
+    return data
+
+
+def _index(trajectory: dict) -> dict[tuple[str, str], dict]:
+    out = {}
+    for section, rows in trajectory.items():
+        for row in rows:
+            out[(section, row["name"])] = row
+    return out
+
+
+def _machine_factor(fresh_idx: dict, base_idx: dict) -> float:
+    """Median fresh/baseline us ratio over shared timed keys — the
+    wholesale speed difference between the two machines."""
+    ratios = [
+        fresh_idx[k]["us_per_call"] / base_idx[k]["us_per_call"]
+        for k in base_idx
+        if k in fresh_idx
+        and base_idx[k]["us_per_call"] > 0
+        and fresh_idx[k]["us_per_call"] > 0
+    ]
+    return statistics.median(ratios) if ratios else 1.0
+
+
+def compare(
+    fresh: dict, baseline: dict, us_tol: float
+) -> tuple[list[str], list[str]]:
+    """(failures, report_lines) for the fresh-vs-baseline diff."""
+    fresh_idx = _index(fresh)
+    base_idx = _index(baseline)
+    failures: list[str] = []
+    factor = _machine_factor(fresh_idx, base_idx)
+    lines = [
+        f"machine-speed factor (median us ratio): {factor:.2f}x — per-key "
+        f"us gate is +{us_tol:.0%} relative to it",
+        f"{'section':<10} {'name':<55} {'us_base':>12} {'us_fresh':>12} "
+        f"{'us_delta':>9} {'hbm_base':>16} {'hbm_fresh':>16} verdict",
+    ]
+
+    def fmt(key, b, f, us_delta, verdict):
+        def hb(row):
+            v = None if row is None else row.get("hbm_bytes_modeled")
+            return "-" if v is None else str(v)
+
+        def us(row):
+            return "-" if row is None else f"{row['us_per_call']:.1f}"
+
+        lines.append(
+            f"{key[0]:<10} {key[1]:<55} {us(b):>12} {us(f):>12} "
+            f"{us_delta:>9} {hb(b):>16} {hb(f):>16} {verdict}"
+        )
+
+    for key in sorted(base_idx):
+        b = base_idx[key]
+        f = fresh_idx.get(key)
+        if f is None:
+            failures.append(f"{key}: present in baseline, missing from fresh run")
+            fmt(key, b, None, "-", "MISSING")
+            continue
+        verdicts = []
+        us_delta = "-"
+        if b["us_per_call"] > 0 and f["us_per_call"] > 0:
+            # machine-normalized: how much this key moved relative to the
+            # suite-wide median drift
+            rel = f["us_per_call"] / (b["us_per_call"] * factor) - 1.0
+            us_delta = f"{rel:+.0%}"
+            if rel > us_tol:
+                failures.append(
+                    f"{key}: us_per_call {b['us_per_call']:.1f} -> "
+                    f"{f['us_per_call']:.1f} ({rel:+.0%} vs suite median "
+                    f"> +{us_tol:.0%})"
+                )
+                verdicts.append("US-REGRESSED")
+        hb_b, hb_f = b.get("hbm_bytes_modeled"), f.get("hbm_bytes_modeled")
+        if hb_b is not None and hb_f is not None and hb_f > hb_b:
+            failures.append(
+                f"{key}: hbm_bytes_modeled {hb_b} -> {hb_f} (any growth fails)"
+            )
+            verdicts.append("HBM-REGRESSED")
+        fmt(key, b, f, us_delta, ",".join(verdicts) or "ok")
+    for key in sorted(set(fresh_idx) - set(base_idx)):
+        fmt(key, None, fresh_idx[key], "-", "new")
+    return failures, lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="fresh --json-out trajectory to gate")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--us-tol",
+        type=float,
+        default=float(os.environ.get("BENCH_US_TOL", "0.25")),
+        help="allowed fractional us_per_call growth (default 0.25)",
+    )
+    args = ap.parse_args(argv)
+    failures, lines = compare(
+        _load(args.fresh), _load(args.baseline), args.us_tol
+    )
+    print("\n".join(lines))
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s) vs {args.baseline}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nOK: no regressions vs {args.baseline} (us tol +{args.us_tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

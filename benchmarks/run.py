@@ -18,8 +18,11 @@ Sections:
 Pass section names to run a subset: python -m benchmarks.run table2 roofline
 Pass ``--json`` to also write the machine-readable perf trajectory
 ``BENCH_2.json`` at the repo root: per measured section, a list of
-``{name, us_per_call, hbm_bytes_modeled}`` rows (the file CI uploads as
-an artifact so kernel regressions fail fast).
+``{name, us_per_call, hbm_bytes_modeled}`` rows. ``--json-out PATH``
+writes the trajectory somewhere else — CI's bench-smoke job writes a
+fresh file next to the committed baseline and gates the diff with
+``benchmarks/check_regression.py`` (>25% us_per_call or any hbm_bytes
+growth per key fails the build).
 """
 
 from __future__ import annotations
@@ -168,6 +171,13 @@ def main(argv: list[str] | None = None, json_path: str = JSON_PATH) -> None:
     args = list(sys.argv[1:] if argv is None else argv)
     emit_json = "--json" in args
     args = [a for a in args if a != "--json"]
+    if "--json-out" in args:
+        i = args.index("--json-out")
+        if i + 1 >= len(args) or args[i + 1].startswith("-"):
+            raise SystemExit("--json-out needs a path argument")
+        json_path = args[i + 1]
+        del args[i : i + 2]
+        emit_json = True
     wanted = args or list(SECTIONS)
     trajectory: dict[str, list] = {}
     for name in wanted:

@@ -30,21 +30,35 @@ Built-in executors (DESIGN.md §2):
                      a lax.scan over stacked layers keeping two live
                      activations regardless of depth (DESIGN.md §4).
 
+  ``sharded_<inner>`` — the multi-device family (DESIGN.md §2.2): wraps a
+                     single-device backend (``xla`` | ``pallas_fused`` |
+                     ``pallas_megakernel``) and runs it per Z-slab under
+                     ``shard_map`` over a 1-D mesh, halos exchanged with
+                     ``spatial_shard.halo_exchange_z`` (layer-wise for the
+                     XLA/fused inners; one RF-radius fetch feeding the
+                     megakernel's haloed-tile planner for the Pallas
+                     inner). ``sharded_<inner>@<n>`` pins the slab count;
+                     without ``@n`` all local devices are used. Specs are
+                     registered on demand — any such name resolves.
+
 ``executor="auto"`` (the PipelineConfig default) resolves per backend: on
-TPU it prefers ``pallas_megakernel`` whenever the depth-first tile plan
-fits the VMEM budget (kernels/megakernel.py), falling back to
+TPU with more than one device it prefers ``sharded_pallas_megakernel``
+when the *per-slab* (slab + RF halo) tile plan fits the VMEM budget; on a
+single TPU device, ``pallas_megakernel`` when its plan fits, else
 ``pallas_fused``; on CPU hosts it resolves to ``xla``, where Pallas
 interpret mode is a correctness tool, not a serving backend. Pass an
 explicit name to force a path (benchmarks and parity tests do).
 
 Each spec also carries ``hbm_bytes`` — the modeled HBM traffic of one
-forward under that executor's schedule (telemetry/traffic.py) — which the
-pipeline stamps into every telemetry record and the benchmarks report
-next to wall-clock.
+forward under that executor's schedule (telemetry/traffic.py) — and, for
+the sharded family, ``collective_bytes`` — the modeled inter-device halo
+bytes. The pipeline stamps both into every telemetry record
+(``hbm_bytes_modeled`` / ``collective_bytes_modeled``) and the benchmarks
+report them next to wall-clock.
 
-Extending: ``register(ExecutorSpec(...))`` adds a backend (e.g. a sharded
-or quantised forward) without touching the pipeline, engine, or benchmarks
-— they all dispatch through this registry.
+Extending: ``register(ExecutorSpec(...))`` adds a backend (e.g. a
+quantised or remote forward) without touching the pipeline, engine, or
+benchmarks — they all dispatch through this registry.
 """
 
 from __future__ import annotations
@@ -54,7 +68,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
-from repro.core import meshnet, streaming
+from repro.core import meshnet, spatial_shard, streaming
 from repro.core.meshnet import MeshNetConfig
 from repro.kernels import megakernel, ops
 from repro.telemetry import traffic
@@ -76,6 +90,8 @@ class ExecutorSpec:
     two-live-buffer schedule (each layer's activation is consumed by
     exactly one next call). ``hbm_bytes(cfg, vol, batch=1)`` prices the
     schedule's HBM traffic (telemetry/traffic.py); None if unmodeled.
+    ``collective_bytes(cfg, vol, batch=1)`` prices inter-device halo
+    traffic — None for single-device backends (modeled as zero).
     """
 
     name: str
@@ -83,6 +99,7 @@ class ExecutorSpec:
     streaming_apply: ApplyFn
     description: str = ""
     hbm_bytes: Optional[BytesFn] = None
+    collective_bytes: Optional[BytesFn] = None
 
 
 _REGISTRY: dict[str, ExecutorSpec] = {}
@@ -104,21 +121,132 @@ def names() -> list[str]:
     return list(_REGISTRY)
 
 
+# --------------------------------------------------------- sharded family ---
+
+#: name prefix of the Z-sharded wrapper family (core/spatial_shard.py).
+SHARDED_PREFIX = "sharded_"
+
+
+def sharded_name(inner: str, num_devices: Optional[int] = None) -> str:
+    """Registry name of the sharded wrapper around ``inner``:
+    ``sharded_<inner>`` (all local devices) or ``sharded_<inner>@<n>``."""
+    base = SHARDED_PREFIX + inner
+    return base if num_devices is None else f"{base}@{num_devices}"
+
+
+def parse_sharded(name: str) -> Optional[tuple[str, Optional[int]]]:
+    """(inner, num_devices) for a sharded-family name, else None.
+    Raises KeyError for a sharded name whose inner backend is unknown or
+    whose slab count is not a positive integer."""
+    if not name.startswith(SHARDED_PREFIX):
+        return None
+    rest = name[len(SHARDED_PREFIX):]
+    inner, _, n = rest.partition("@")
+    if inner not in spatial_shard.SHARDED_INNERS:
+        raise KeyError(
+            f"unknown executor {name!r}: sharded inner must be one of "
+            f"{sorted(spatial_shard.SHARDED_INNERS)}"
+        )
+    if n and (not n.isdigit() or int(n) < 1):
+        raise KeyError(
+            f"unknown executor {name!r}: slab count after '@' must be a "
+            "positive integer"
+        )
+    return inner, (int(n) if n else None)
+
+
+def inner_of(name: str) -> str:
+    """The single-device backend behind a sharded name (identity for
+    non-sharded names) — what a device-count override re-wraps."""
+    parsed = parse_sharded(name)
+    return parsed[0] if parsed else name
+
+
+def shardable(name: str) -> bool:
+    """Whether the (inner of the) named executor has a sharded form."""
+    return inner_of(name) in spatial_shard.SHARDED_INNERS
+
+
+def _make_sharded_spec(inner: str, num_devices: Optional[int]) -> ExecutorSpec:
+    def _apply(params, x, cfg):
+        return spatial_shard.sharded_executor_apply(
+            inner, params, x, cfg, num_devices=num_devices
+        )
+
+    def _hbm(cfg, vol, batch: int = 1):
+        n = num_devices or jax.device_count()
+        return traffic.meshnet_sharded_bytes(inner, cfg, vol, n, batch=batch)
+
+    def _collective(cfg, vol, batch: int = 1):
+        n = num_devices or jax.device_count()
+        return traffic.meshnet_collective_bytes(cfg, vol, n, batch=batch)
+
+    slabs = f"{num_devices} Z-slabs" if num_devices else "one Z-slab per device"
+    return ExecutorSpec(
+        name=sharded_name(inner, num_devices),
+        apply=_apply,
+        streaming_apply=_apply,
+        description=f"shard_map halo-exchange wrapper over {inner!r} ({slabs})",
+        hbm_bytes=_hbm,
+        collective_bytes=_collective,
+    )
+
+
+def ensure_sharded(inner_or_name: str, num_devices: Optional[int] = None) -> str:
+    """Register (idempotently) and return the sharded wrapper's name.
+
+    Accepts a bare inner backend (``"pallas_fused"``) or an existing
+    sharded name (``"sharded_pallas_fused"``, re-pinned to ``num_devices``
+    when given). This is how the pipeline's ``shard_devices`` and the
+    engine's per-request device-count overrides materialise specs.
+    """
+    inner = inner_of(inner_or_name)
+    if inner not in spatial_shard.SHARDED_INNERS:
+        raise KeyError(
+            f"executor {inner!r} cannot be sharded; supported inners: "
+            f"{sorted(spatial_shard.SHARDED_INNERS)}"
+        )
+    name = sharded_name(inner, num_devices)
+    if name not in _REGISTRY:
+        register(_make_sharded_spec(inner, num_devices))
+    return name
+
+
 def default_executor(
     model: Optional[MeshNetConfig] = None,
     volume_shape: Optional[tuple[int, int, int]] = None,
+    *,
+    backend: Optional[str] = None,
+    num_devices: Optional[int] = None,
 ) -> str:
-    """The production default. On TPU: the depth-first megakernel when a
-    tile plan fits the VMEM budget for this (model, volume), else the
-    per-layer fused path; without a model to plan for, the fused path.
-    On CPU hosts: XLA (Pallas interpret mode is a correctness path, far
-    too slow to serve)."""
-    if jax.default_backend() != "tpu":
+    """The production default. On TPU: the sharded depth-first megakernel
+    when more than one device is attached, the volume's Z dim divides
+    evenly, and the *per-slab* (slab + RF-radius halo) tile plan fits the
+    VMEM budget; on a single device, the megakernel when its plan fits,
+    else the per-layer fused path; without a model to plan for, the fused
+    path. On CPU hosts: XLA (Pallas interpret mode is a correctness path,
+    far too slow to serve). ``backend``/``num_devices`` override the host
+    introspection (tests pin them)."""
+    backend = backend or jax.default_backend()
+    if backend != "tpu":
         return "xla"
     if model is None:
         return "pallas_fused"
+    vol = volume_shape or (256, 256, 256)
+    n = jax.device_count() if num_devices is None else num_devices
+    if n > 1 and vol[0] % n == 0:
+        radius = sum(model.dilations)
+        slab = (vol[0] // n + 2 * radius, vol[1], vol[2])
+        try:
+            megakernel.plan_for_config(model, slab)
+            # an explicit device count pins the spec ("@n"), so the
+            # geometry validated here is the geometry that executes; the
+            # introspected count stays unpinned (same n at run time).
+            return ensure_sharded("pallas_megakernel", num_devices)
+        except ValueError:
+            pass
     try:
-        megakernel.plan_for_config(model, volume_shape or (256, 256, 256))
+        megakernel.plan_for_config(model, vol)
         return "pallas_megakernel"
     except ValueError:
         return "pallas_fused"
@@ -130,10 +258,14 @@ def resolve(
     volume_shape: Optional[tuple[int, int, int]] = None,
 ) -> str:
     """Map None/"auto" to the backend default (model/shape aware when the
-    caller can supply them); validate explicit names."""
+    caller can supply them); validate explicit names. Sharded-family names
+    (``sharded_<inner>[@n]``) register their spec on first use."""
     if name is None or name == AUTO:
         return default_executor(model, volume_shape)
     if name not in _REGISTRY:
+        parsed = parse_sharded(name)  # KeyError on a bad sharded inner
+        if parsed is not None:
+            return ensure_sharded(parsed[0], parsed[1])
         raise KeyError(
             f"unknown executor {name!r}; registered: {sorted(_REGISTRY)} (or 'auto')"
         )
@@ -163,6 +295,22 @@ def modeled_hbm_bytes(
     if spec.hbm_bytes is None:
         return None
     return spec.hbm_bytes(cfg, volume_shape, batch=batch)
+
+
+def modeled_collective_bytes(
+    name: Optional[str],
+    cfg: MeshNetConfig,
+    volume_shape: tuple[int, int, int],
+    batch: int = 1,
+) -> int:
+    """Modeled inter-device halo bytes of one forward under the named
+    executor — 0 for single-device backends, the
+    ``traffic.meshnet_collective_bytes`` model for the sharded family.
+    Stamped on every pipeline run next to ``hbm_bytes_modeled``."""
+    spec = _REGISTRY[resolve(name, cfg, volume_shape)]
+    if spec.collective_bytes is None:
+        return 0
+    return spec.collective_bytes(cfg, volume_shape, batch=batch)
 
 
 _JIT_CACHE: dict[tuple[str, str], Callable] = {}
@@ -196,12 +344,19 @@ def jitted_apply(
     return _jitted(resolve(name), schedule)
 
 
-def make_infer(name: Optional[str], params, cfg: MeshNetConfig) -> Callable[[jax.Array], jax.Array]:
+def make_infer(
+    name: Optional[str],
+    params,
+    cfg: MeshNetConfig,
+    volume_shape: Optional[tuple[int, int, int]] = None,
+) -> Callable[[jax.Array], jax.Array]:
     """Build the per-block closure used by sub-volume patching: maps
     (B, d, h, w[, C]) cubes -> (B, d, h, w, classes). Backed by the shared
     ``jitted_apply`` cache, and compiled once per cube shape because all
-    cubes in a CubeDivider share a static shape."""
-    fn = jitted_apply(resolve(name, cfg))
+    cubes in a CubeDivider share a static shape. ``volume_shape`` is the
+    *cube* shape the closure will serve — "auto" judges slab divisibility
+    and VMEM plans on it, not on the full-volume default."""
+    fn = jitted_apply(resolve(name, cfg, volume_shape))
 
     def infer(c: jax.Array) -> jax.Array:
         return fn(params, c, cfg)
@@ -253,3 +408,9 @@ register(
         hbm_bytes=traffic.meshnet_streaming_bytes,
     )
 )
+
+# The sharded wrapper family (all-local-devices variants; pinned "@n"
+# variants register on demand through resolve/ensure_sharded).
+for _inner in spatial_shard.SHARDED_INNERS:
+    ensure_sharded(_inner)
+del _inner

@@ -136,8 +136,10 @@ def subvolume_inference(
     (B, d, h, w) -> (B, d, h, w, C), or — when ``params``/``model_cfg`` are
     given instead — a closure built from the executor registry
     (``executors.make_infer``), so failsafe mode runs the same backend
-    ("xla" | "pallas_fused" | "pallas_megakernel" | "streaming", or
-    "auto") as every other mode.
+    ("xla" | "pallas_fused" | "pallas_megakernel" | "streaming" |
+    "sharded_<inner>[@n]", or "auto") as every other mode — a sharded
+    backend Z-slices each padded cube over the device mesh, so the cube's
+    read size must divide by the slab count.
     Either way it is compiled once because all cubes share a static shape.
     ``batch_cubes`` packs cubes into the batch dim — the TPU analogue of
     Brainchop queuing cube jobs on the WebGL queue.
@@ -147,7 +149,10 @@ def subvolume_inference(
             raise ValueError("pass infer_fn, or params + model_cfg (+ executor)")
         from repro.core import executors
 
-        infer_fn = executors.make_infer(executor, params, model_cfg)
+        # resolve "auto" against the padded-cube geometry the closure will
+        # actually serve (slab divisibility, per-cube VMEM plans)
+        read = (cube + 2 * overlap,) * 3
+        infer_fn = executors.make_infer(executor, params, model_cfg, read)
     elif params is not None or model_cfg is not None or executor is not None:
         raise ValueError(
             "pass either infer_fn or params/model_cfg/executor, not both — "

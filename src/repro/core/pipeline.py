@@ -8,11 +8,15 @@ Inference dispatches through the pluggable executor registry
 forward implementation that runs on each block of work — ``"xla"`` (the
 reference graph), ``"pallas_fused"`` (one fused conv+BN+ReLU Pallas call
 per layer), ``"pallas_megakernel"`` (the whole stack per VMEM-resident
-tile, the production TPU path), or ``"streaming"`` (scan-over-layers).
-The default ``"auto"`` resolves per host: the megakernel on TPU when its
-tile plan fits VMEM, else the fused kernel; XLA on CPU hosts. The executor
-that actually ran — and the modeled HBM bytes its schedule moves for this
-volume (telemetry/traffic.py) — is recorded in the telemetry record.
+tile, the production TPU path), ``"streaming"`` (scan-over-layers), or
+the multi-device ``"sharded_<inner>[@n]"`` family (halo-exchange Z-slab
+sharding, core/spatial_shard.py; ``PipelineConfig.shard_devices`` pins
+the slab count for any executor). The default ``"auto"`` resolves per
+host: the sharded megakernel on multi-device TPU when the per-slab tile
+plan fits VMEM, the megakernel on one TPU device, else the fused kernel;
+XLA on CPU hosts. The executor that actually ran — and the modeled HBM
+and inter-device halo bytes its schedule moves for this volume
+(telemetry/traffic.py) — is recorded in the telemetry record.
 
 Each stage is timed into a telemetry record, mirroring Table IV's
 per-stage columns (Preprocessing / Cropping / Inference / Merging /
@@ -33,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import components, conform as conform_mod, cropping, executors, patching
 from repro.core.meshnet import MeshNetConfig
+from repro.core.spatial_shard import ShardGeometryError
 from repro.telemetry.record import StageTimes, TelemetryRecord
 from repro.telemetry.budget import MemoryBudget, BudgetExceeded
 
@@ -47,10 +52,17 @@ class PipelineConfig:
     # inference mode: "full" | "subvolume" | "streaming"
     mode: str = "full"
     # forward implementation: "auto" | "xla" | "pallas_fused" |
-    # "pallas_megakernel" | "streaming" (core/executors.py; "auto" ->
-    # megakernel on TPU when its tile plan fits VMEM, else pallas_fused;
-    # xla on CPU hosts)
+    # "pallas_megakernel" | "streaming" | "sharded_<inner>[@n]"
+    # (core/executors.py; "auto" -> the sharded megakernel on multi-device
+    # TPU when the per-slab plan fits VMEM, the megakernel on one TPU
+    # device, else pallas_fused; xla on CPU hosts)
     executor: str = executors.AUTO
+    # run the (resolved) executor Z-sharded over this many devices
+    # (core/spatial_shard.py): the executor is re-wrapped as
+    # sharded_<inner>@<n>. None = leave the executor as resolved; 1 =
+    # force single-device (unwraps a sharded default). Executors with no
+    # sharded form (streaming) keep running single-device.
+    shard_devices: Optional[int] = None
     cube: int = 64
     overlap: int = patching.MESHNET_RF_RADIUS
     batch_cubes: int = 1
@@ -71,6 +83,14 @@ def _now() -> float:
     return time.perf_counter()
 
 
+def _geometry_fail_type(e: ValueError) -> str:
+    """Telemetry fail type for a ValueError out of the pre-flight models:
+    slab-geometry problems (ShardGeometryError: non-divisible Z, missing
+    devices) get their own label; any other planning ValueError is an
+    unplannable-VMEM schedule."""
+    return "shard_geometry" if isinstance(e, ShardGeometryError) else "vmem_oom"
+
+
 def run(
     cfg: PipelineConfig,
     params: Any,
@@ -83,11 +103,48 @@ def run(
     failures — returns a failed TelemetryRecord (status='fail'), matching
     the tool's telemetry semantics."""
     times = StageTimes()
-    exec_name = executors.resolve(cfg.executor, cfg.model, cfg.volume_shape)
+    # Resolve against the geometry each forward actually sees: failsafe
+    # mode runs the executor on padded cubes, not the whole volume — so
+    # "auto" must judge slab divisibility / VMEM plans on the cube shape
+    # (a sharded default that can't slice the cube would fail every
+    # failsafe request).
+    work_shape = (
+        (cfg.cube + 2 * cfg.overlap,) * 3
+        if cfg.mode == "subvolume"
+        else cfg.volume_shape
+    )
+    exec_name = executors.resolve(cfg.executor, cfg.model, work_shape)
+    if cfg.shard_devices is not None:
+        inner = executors.inner_of(exec_name)
+        parsed = executors.parse_sharded(exec_name)
+        already_pinned = parsed is not None and parsed[1] is not None
+        if (
+            cfg.shard_devices > 1
+            and executors.shardable(inner)
+            and not already_pinned
+        ):
+            # per-request slab count: re-wrap the resolved backend (or the
+            # sharded family's unpinned form) pinned to this many Z-slabs.
+            # An executor name that pins its own count ("sharded_xla@8")
+            # is an explicit request and wins over this default.
+            exec_name = executors.ensure_sharded(inner, cfg.shard_devices)
+        elif cfg.shard_devices <= 1:
+            # devices=1 forces single-device, unwrapping a sharded default
+            exec_name = inner
+        # executors with no sharded form (streaming) keep running
+        # single-device rather than failing the request.
     rec = TelemetryRecord(
         model=cfg.name, mode=cfg.mode, status="ok", times=times, executor=exec_name
     )
     try:
+        # Pre-flight the sharded family's hard requirements: the host must
+        # actually have the slab count's devices (mesh_for raises the same
+        # ValueError the forward would, but before any compute).
+        parsed = executors.parse_sharded(exec_name)
+        if parsed is not None:
+            from repro.core import spatial_shard
+
+            spatial_shard.mesh_for(parsed[1])
         # Price the inference schedule's HBM traffic for this request: the
         # per-forward model times the number of forwards the mode implies.
         # For the megakernel this also *plans* the schedule, so an
@@ -98,23 +155,33 @@ def run(
             ncubes = math.prod(
                 -(-s // cfg.cube) for s in cfg.volume_shape
             )
+            cube_shape = (cfg.cube + 2 * cfg.overlap,) * 3
             per_cube = executors.modeled_hbm_bytes(
-                exec_name, cfg.model, (cfg.cube + 2 * cfg.overlap,) * 3
+                exec_name, cfg.model, cube_shape
             )
             rec.hbm_bytes_modeled = None if per_cube is None else ncubes * per_cube
+            rec.collective_bytes_modeled = ncubes * executors.modeled_collective_bytes(
+                exec_name, cfg.model, cube_shape
+            )
         else:
             rec.hbm_bytes_modeled = executors.modeled_hbm_bytes(
+                exec_name, cfg.model, cfg.volume_shape
+            )
+            rec.collective_bytes_modeled = executors.modeled_collective_bytes(
                 exec_name, cfg.model, cfg.volume_shape
             )
         if cfg.use_cropping and mask_model is not None:
             # the mask forward runs under the same executor; probe it too
             executors.modeled_hbm_bytes(exec_name, mask_model[1], cfg.volume_shape)
-    except ValueError:
+    except ValueError as e:
         # Unplannable schedule: the forward itself would raise the same
         # error, so keep the never-raises telemetry contract and report a
-        # failed run (the VMEM analogue of the budget fail types).
+        # failed run (the VMEM analogue of the budget fail types). A Z dim
+        # that doesn't divide into the requested slabs — or a slab count
+        # the host lacks devices for — surfaces the same way, under its
+        # own fail type.
         rec.status = "fail"
-        rec.fail_type = "vmem_oom"
+        rec.fail_type = _geometry_fail_type(e)
         return PipelineResult(segmentation=None, record=rec)
     budget = cfg.budget or MemoryBudget.unlimited()
 
@@ -189,4 +256,13 @@ def run(
     except BudgetExceeded as e:
         rec.status = "fail"
         rec.fail_type = e.fail_type
+        return PipelineResult(segmentation=None, record=rec)
+    except ShardGeometryError:
+        # The forward can still hit slab geometry the pre-flight could not
+        # see — cropping picks its shape at run time, and a crop size need
+        # not divide into a sharded executor's slabs. Same contract: a
+        # failed record, never an exception. (Other ValueErrors — bad
+        # input, bugs — propagate with their tracebacks.)
+        rec.status = "fail"
+        rec.fail_type = "shard_geometry"
         return PipelineResult(segmentation=None, record=rec)

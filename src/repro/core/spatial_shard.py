@@ -11,10 +11,35 @@ overlap ("halo") is exchanged between neighbouring devices with
 Exactness: with a halo of ``dilation`` voxels per side per layer, the slab
 conv equals the full-volume conv — the distributed analogue of the
 ``overlap >= RF`` rule in core/patching.py, paid incrementally per layer
-(total exchanged per side = sum(dilations) = RF radius).
+(total exchanged per side = sum(dilations) = RF radius). Pod-edge devices
+receive *zeros* from the void, which is exactly the volume's per-layer
+'same' zero padding, so — unlike sub-volume patching — sharding has **no
+boundary-band accuracy loss** (EXPERIMENTS.md §Perf H6).
 
-Implemented with ``shard_map`` so every collective is explicit — this is
-the module the dry-run exercises for the meshnet configs.
+Slabs thinner than the halo (small volumes over many devices, or the
+one-shot RF-radius fetch below) are handled by *multi-hop* exchange:
+``halo_exchange_z`` chains ``ppermute`` fetches through as many neighbours
+as the halo spans, so any (volume, device-count) geometry with
+``D % num_devices == 0`` is exact.
+
+This module also implements the **sharded executor family** of the
+registry (core/executors.py, DESIGN.md §2.2): ``sharded_executor_apply``
+wraps any single-device backend and runs it per-slab under ``shard_map``
+over a 1-D Z mesh —
+
+  * ``xla`` inner — per-layer halo exchange + valid-Z conv (the original
+    layer-wise schedule of this module);
+  * ``pallas_fused`` inner — per-layer halo exchange + the fused Pallas
+    conv+BN+ReLU kernel run 'same' on the extended slab, cropped back;
+  * ``pallas_megakernel`` inner — ONE multi-hop exchange of the full
+    RF radius (sum(dilations) = 46), then the depth-first megakernel runs
+    on the slab+halo window (its DP tile plan computed on that shape) with
+    dynamic Z mask bounds so per-layer 'same' zero padding is reproduced
+    at the true volume edges, not the window edges.
+
+All three are numerically equal to their single-device inner executor
+(tests/test_sharded_executor.py enforces <=1e-4 across PAPER_MODELS at
+2/4/8 slabs, including slabs thinner than the RF radius).
 """
 
 from __future__ import annotations
@@ -23,35 +48,97 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import meshnet
 from repro.core.meshnet import MeshNetConfig
+from repro.kernels import ops
+
+# jax.shard_map landed after 0.4.x; fall back to the experimental home.
+try:  # pragma: no cover - version-dependent
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+#: the Z-mesh axis name the sharded executors use.
+SPATIAL_AXIS = "z"
+
+
+class ShardGeometryError(ValueError):
+    """The requested slab geometry cannot run: the Z dim does not divide
+    into the slab count, or the host lacks the devices. The pipeline maps
+    this to a failed telemetry record (fail_type='shard_geometry') instead
+    of letting it escape — unlike other ValueErrors, which indicate bugs
+    or bad input and propagate."""
+
+
+def _axis_size(axis_name: str) -> int:
+    """Static size of a shard_map axis (compat across jax versions)."""
+    try:
+        return jax.lax.axis_size(axis_name)  # jax >= 0.4.32-ish
+    except AttributeError:
+        size = jax.core.axis_frame(axis_name)  # 0.4.37: returns the int
+        return getattr(size, "size", size)
+
+
+@functools.lru_cache(maxsize=32)
+def mesh_for(num_devices: int | None = None, axis: str = SPATIAL_AXIS) -> Mesh:
+    """A 1-D Z mesh over the first ``num_devices`` local devices, cached so
+    every pipeline run / engine request with the same slab count shares one
+    Mesh object (and one compiled executable via the registry's jit cache).
+    """
+    n = num_devices or jax.device_count()
+    devs = jax.devices()
+    if n > len(devs):
+        raise ShardGeometryError(
+            f"sharded executor wants {n} devices; host has {len(devs)}"
+        )
+    return Mesh(np.array(devs[:n]), (axis,))
+
+
+def _fetch_slab(x: jax.Array, offset: int, axis_name: str, n: int) -> jax.Array:
+    """The slab of the device ``offset`` positions before me (offset > 0)
+    or after me (offset < 0); zeros where no such device exists (the pod
+    edge — exactly the volume's zero padding)."""
+    off = abs(offset)
+    if off >= n:
+        return jnp.zeros_like(x)
+    if offset > 0:  # from device i - offset: i - offset sends to i
+        perm = [(i, i + off) for i in range(n - off)]
+    else:  # from device i + offset
+        perm = [(i, i - off) for i in range(off, n)]
+    return jax.lax.ppermute(x, axis_name, perm)
 
 
 def halo_exchange_z(x: jax.Array, halo: int, axis_name: str) -> jax.Array:
-    """Concatenate `halo` Z-slices from both neighbours onto a local slab.
+    """Concatenate ``halo`` Z-slices from both neighbour chains onto a slab.
 
     x: (B, Dz_local, H, W, C) -> (B, Dz_local + 2*halo, H, W, C).
-    Pod edges receive zeros (the volume's zero 'same' padding).
+    Pod edges receive zeros (the volume's zero 'same' padding). Halos wider
+    than the local slab are fetched *multi-hop*: ceil(halo / Dz_local)
+    chained ``ppermute`` steps per side, the farthest hop trimmed to the
+    remainder — so one exchange of ``n*h`` provides exactly the context of
+    ``n`` per-layer exchanges of ``h`` (tests/test_properties.py).
     """
-    n = jax.lax.axis_size(axis_name)
+    if halo == 0:
+        return x
+    n = _axis_size(axis_name)
     if n == 1:
         pad = [(0, 0), (halo, halo), (0, 0), (0, 0), (0, 0)]
         return jnp.pad(x, pad)
-    if x.shape[1] < halo:
-        raise ValueError(
-            f"local Z-slab ({x.shape[1]}) smaller than halo ({halo}): "
-            "use fewer spatial shards or a larger volume (need "
-            "D/shards >= max dilation)."
-        )
-    # No wraparound pairs: devices with no sender receive zeros, which is
-    # exactly the volume's zero 'same' padding at the pod edges.
-    fwd = [(i, i + 1) for i in range(n - 1)]  # send my tail to next
-    bwd = [(i, i - 1) for i in range(1, n)]  # send my head to prev
-    from_prev = jax.lax.ppermute(x[:, -halo:], axis_name, fwd)
-    from_next = jax.lax.ppermute(x[:, :halo], axis_name, bwd)
-    return jnp.concatenate([from_prev, x, from_next], axis=1)
+    dloc = x.shape[1]
+    hops = -(-halo // dloc)  # ceil
+    rem = halo - (hops - 1) * dloc  # slices needed from the farthest hop
+    left = []  # farthest neighbour first, so axis-1 order is global order
+    right = []
+    for j in range(hops, 0, -1):
+        src = x[:, -rem:] if j == hops and rem < dloc else x
+        left.append(_fetch_slab(src, j, axis_name, n))
+    for j in range(1, hops + 1):
+        src = x[:, :rem] if j == hops and rem < dloc else x
+        right.append(_fetch_slab(src, -j, axis_name, n))
+    return jnp.concatenate(left + [x] + right, axis=1)
 
 
 def _conv_layer_slab(layer, x, dilation: int, cfg: MeshNetConfig, axis_name: str):
@@ -72,6 +159,118 @@ def _conv_layer_slab(layer, x, dilation: int, cfg: MeshNetConfig, axis_name: str
     return jax.nn.relu(out)
 
 
+def _head(params, x: jax.Array) -> jax.Array:
+    head = params["head"]
+    return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+
+
+def _slab_xla(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+    """Layer-wise schedule, XLA inner: exchange d, valid-Z conv, repeat."""
+    for i, d in enumerate(cfg.dilations):
+        x = _conv_layer_slab(params["layers"][i], x, d, cfg, axis_name)
+    return _head(params, x)
+
+
+def _slab_fused(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+    """Layer-wise schedule, fused Pallas inner: exchange d, run the fused
+    conv+BN+ReLU kernel 'same' on the extended slab, crop the polluted
+    d-band back off. 'Same' output at positions >= d from the extended
+    edge only taps in-window data, so the crop is exact; pod edges hold
+    zero halos == the volume's per-layer zero padding."""
+    for i, d in enumerate(cfg.dilations):
+        layer = params["layers"][i]
+        if cfg.use_batchnorm:
+            scale, offset = ops.fold_batchnorm(layer)
+        else:
+            scale = offset = None
+        xe = halo_exchange_z(x, d, axis_name)
+        out = ops.dilated_conv3d(
+            xe, layer["w"], layer["b"],
+            dilation=d, scale=scale, offset=offset, fuse_affine=True,
+        )
+        x = out[:, d:-d]
+    return _head(params, x)
+
+
+def _slab_megakernel(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+    """One-shot schedule, megakernel inner: a single multi-hop exchange of
+    the full RF radius feeds the depth-first megakernel, whose tile plan is
+    computed on the slab+halo window. Dynamic Z mask bounds tell the kernel
+    where the *true* volume ends inside the window, so per-layer 'same'
+    zero padding is reproduced at pod edges (bit-exact boundary), while
+    interior window edges only pollute the halo band the final crop drops.
+    """
+    n = _axis_size(axis_name)
+    dloc = x.shape[1]
+    radius = sum(cfg.dilations)
+    xe = halo_exchange_z(x, radius, axis_name)
+    g = jax.lax.axis_index(axis_name) * dloc  # my slab's global Z start
+    # local coord z holds global z = g - radius + z; valid global range
+    # [0, n * dloc) maps to local [radius - g, radius - g + n * dloc).
+    z_bounds = jnp.stack(
+        [radius - g, radius - g + n * dloc]
+    ).astype(jnp.int32)
+    out = ops.meshnet_apply_megakernel(params, xe, cfg, z_bounds=z_bounds)
+    return out[:, radius : radius + dloc]
+
+
+_SLAB_FNS = {
+    "xla": _slab_xla,
+    "pallas_fused": _slab_fused,
+    "pallas_megakernel": _slab_megakernel,
+}
+
+#: single-device backends the sharded wrapper accepts as inners.
+SHARDED_INNERS = tuple(_SLAB_FNS)
+
+
+def sharded_executor_apply(
+    inner: str,
+    params,
+    x: jax.Array,
+    cfg: MeshNetConfig,
+    *,
+    num_devices: int | None = None,
+    axis: str = SPATIAL_AXIS,
+) -> jax.Array:
+    """Z-sharded MeshNet forward through the named inner backend.
+
+    x: (B, D, H, W) or (B, D, H, W, C); D must divide by the slab count.
+    The registry's ``sharded_<inner>`` specs (core/executors.py) are thin
+    closures over this function; parity with the single-device inner is
+    the sharded family's contract (tests/test_sharded_executor.py).
+    """
+    if inner not in _SLAB_FNS:
+        raise KeyError(
+            f"unknown sharded inner {inner!r}; supported: {sorted(_SLAB_FNS)}"
+        )
+    n = num_devices or jax.device_count()
+    if x.ndim == 4:
+        x = x[..., None]
+    if x.shape[1] % n:
+        raise ShardGeometryError(
+            f"Z dim {x.shape[1]} not divisible by {n} slabs — pick a device "
+            "count that divides the volume depth"
+        )
+    mesh = mesh_for(n, axis)
+    in_spec = P(None, axis, None, None, None)
+    slab_fn = _SLAB_FNS[inner]
+
+    fn = _shard_map(
+        lambda p, xs: slab_fn(p, xs, cfg, axis),
+        mesh=mesh,
+        in_specs=(P(), in_spec),
+        out_specs=in_spec,
+        # pallas_call has no replication rule; all our outputs are honestly
+        # P(None, "z", ...)-sharded, so skipping the rep check is sound.
+        check_rep=False,
+    )
+    # Lay inputs out to match the specs (callers may pass single-device arrays).
+    params = jax.device_put(params, NamedSharding(mesh, P()))
+    x = jax.device_put(x, NamedSharding(mesh, in_spec))
+    return fn(params, x)
+
+
 def sharded_apply(
     params,
     x: jax.Array,
@@ -82,7 +281,8 @@ def sharded_apply(
     batch_axis: str | None = "data",
 ) -> jax.Array:
     """Full-volume MeshNet inference with the volume Z-sharded over
-    ``spatial_axis`` and the batch over ``batch_axis``.
+    ``spatial_axis`` and the batch over ``batch_axis`` (the standalone
+    2-D-mesh demo; the executor registry path is ``sharded_executor_apply``).
 
     x: (B, D, H, W) or (B, D, H, W, 1); D must divide the spatial axis size.
     """
@@ -97,7 +297,7 @@ def sharded_apply(
         head = params["head"]
         return meshnet.dilated_conv3d(xs, head["w"], head["b"], dilation=1)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         slab_fn,
         mesh=mesh,
         in_specs=(P(), in_spec),

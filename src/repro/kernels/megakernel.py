@@ -124,6 +124,25 @@ def _segment_vmem_bytes(seg: Segment, dtype_bytes: int = 4) -> int:
     return buf_in + ping + pong + wgt + logits + acc
 
 
+def _segment_hbm_bytes(
+    seg: Segment, padded: tuple[int, int, int], dtype_bytes: int
+) -> int:
+    """Modeled HBM bytes of one segment: haloed tile reads, per-grid-step
+    weight streams, and the central-region write. The ONE formula shared
+    by ``MegakernelPlan.hbm_bytes`` (what telemetry/benchmarks report) and
+    the planner's DP objective — so the plan the DP picks is the minimum
+    of the model it reports."""
+    ntiles = math.prod(pp // t for pp, t in zip(padded, seg.tile))
+    window = math.prod(t + 2 * seg.halo for t in seg.tile)
+    wgt = 27 * seg.cin * seg.channels * dtype_bytes
+    wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
+    if seg.fuse_head:
+        wgt += seg.channels * seg.num_classes * dtype_bytes
+    total = ntiles * (window * seg.cin * dtype_bytes + wgt)
+    total += math.prod(padded) * seg.cout * dtype_bytes
+    return total
+
+
 @dataclasses.dataclass(frozen=True)
 class MegakernelPlan:
     """Static execution plan: segments + geometry for one (cfg, volume)."""
@@ -159,16 +178,8 @@ class MegakernelPlan:
         # host-side zero-pad of the raw input (read + padded write)
         total += math.prod(self.vol) * first.cin * dtype_bytes
         total += math.prod(t + 2 * first.halo for t in p0) * first.cin * dtype_bytes
-        for i, seg in enumerate(self.segments):
-            p = self.padded(seg)
-            ntiles = math.prod(pp // t for pp, t in zip(p, seg.tile))
-            window = math.prod(t + 2 * seg.halo for t in seg.tile)
-            wgt = 27 * seg.cin * seg.channels * dtype_bytes
-            wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
-            if seg.fuse_head:
-                wgt += seg.channels * seg.num_classes * dtype_bytes
-            total += ntiles * (window * seg.cin * dtype_bytes + wgt)
-            total += math.prod(p) * seg.cout * dtype_bytes
+        for seg in self.segments:
+            total += _segment_hbm_bytes(seg, self.padded(seg), dtype_bytes)
         return batch * total
 
 
@@ -235,15 +246,11 @@ def _plan_cached(
 
     def traffic(seg: Segment, plan_: MegakernelPlan) -> int:
         p = plan_.padded(seg)
-        ntiles = math.prod(pp // t for pp, t in zip(p, seg.tile))
-        window = math.prod(t + 2 * seg.halo for t in seg.tile)
-        rd = ntiles * window * seg.cin * dtype_bytes
-        wr = math.prod(p) * seg.cout * dtype_bytes
         pad = 0
         if seg.start == 0:
             pad = math.prod(vol) * seg.cin * dtype_bytes
             pad += math.prod(t + 2 * seg.halo for t in p) * seg.cin * dtype_bytes
-        return pad + rd + wr
+        return pad + _segment_hbm_bytes(seg, p, dtype_bytes)
 
     probe = MegakernelPlan(segments=(), vol=vol, vmem_budget=vmem_budget)
     INF = float("inf")
@@ -298,19 +305,33 @@ def _segment_kernel(
     vol: tuple[int, int, int],
     out_halo: int,
     use_affine: bool,
+    has_z_bounds: bool = False,
 ):
     """Kernel body: DMA the haloed input window, run ``seg``'s layers
     back-to-back in VMEM (masking out-of-volume positions after every
     layer so per-layer 'same' zero padding is reproduced exactly), then
-    DMA the finished tile (or fused-head logits) back out."""
+    DMA the finished tile (or fused-head logits) back out.
+
+    ``has_z_bounds`` adds a dynamic (2,)-int32 SMEM input narrowing the
+    valid Z interval below ``[0, vol[0])`` — the sharded executor
+    (core/spatial_shard.py) uses it to place the *true* volume boundary
+    inside a slab+halo window, so pod-edge slabs re-zero their
+    out-of-volume halo per layer exactly like full-volume 'same' padding.
+    """
     k = len(seg.dilations)
     per_layer = 4 if use_affine else 2
-    n_in = 1 + k * per_layer + (2 if seg.fuse_head else 0)
+    n_head = 2 if seg.fuse_head else 0
+    n_in = 1 + k * per_layer + n_head + (1 if has_z_bounds else 0)
     x_ref = refs[0]
     layer_refs = [
         refs[1 + i * per_layer : 1 + (i + 1) * per_layer] for i in range(k)
     ]
-    head_refs = refs[1 + k * per_layer : n_in] if seg.fuse_head else None
+    head_refs = (
+        refs[1 + k * per_layer : 1 + k * per_layer + n_head]
+        if seg.fuse_head
+        else None
+    )
+    zb_ref = refs[n_in - 1] if has_z_bounds else None
     out_ref = refs[n_in]
     scratch = refs[n_in + 1 :]
     buf_in, ping = scratch[0], scratch[1]
@@ -344,12 +365,16 @@ def _segment_kernel(
     def mask(v, size, r):
         """Zero positions whose global coord (tile origin - r + local) lies
         outside the true volume — per-layer 'same' padding, and the
-        neutraliser for the staging arrays' unwritten halo borders."""
+        neutraliser for the staging arrays' unwritten halo borders. With
+        ``z_bounds`` the Z-valid interval is the intersection of
+        ``[0, vol[0])`` and the dynamic ``[zb[0], zb[1])``."""
         ok = None
         for ax in range(3):
             i = jax.lax.broadcasted_iota(jnp.int32, size + (1,), ax)
             lo = r - ids[ax] * tile[ax]
             m = (i >= lo) & (i < vol[ax] + lo)
+            if ax == 0 and zb_ref is not None:
+                m = m & (i >= zb_ref[0] + lo) & (i < zb_ref[1] + lo)
             ok = m if ok is None else (ok & m)
         return jnp.where(ok, v, jnp.zeros((), v.dtype))
 
@@ -433,6 +458,7 @@ def _run_segment(
     use_affine: bool,
     fold_affine,
     interpret: bool,
+    z_bounds: jax.Array | None = None,
 ) -> jax.Array:
     B = act.shape[0]
     padded = pln.padded(seg)
@@ -459,6 +485,9 @@ def _run_segment(
     if seg.fuse_head:
         add_full(params["head"]["w"][0, 0, 0])  # (C, num_classes)
         add_full(params["head"]["b"])
+    if z_bounds is not None:
+        args.append(z_bounds)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
 
     sizes = seg.buffer_sizes()
     scratch = [
@@ -477,6 +506,7 @@ def _run_segment(
         vol=pln.vol,
         out_halo=out_halo,
         use_affine=use_affine,
+        has_z_bounds=z_bounds is not None,
     )
     grid = (B,) + tuple(p // t for p, t in zip(padded, seg.tile))
     return pl.pallas_call(
@@ -499,12 +529,18 @@ def meshnet_apply(
     vmem_budget: int = VMEM_BUDGET,
     interpret: bool = True,
     fold_affine=None,
+    z_bounds: jax.Array | None = None,
 ) -> jax.Array:
     """Depth-first MeshNet forward (== meshnet.apply, eval mode).
 
     ``fold_affine`` maps a layer dict to the folded inference-BN
     (scale, offset); ops.meshnet_apply_megakernel supplies it (kept
     injectable so this module does not import ops).
+
+    ``z_bounds`` (optional (2,)-int32) narrows the valid Z interval below
+    ``[0, D)``: positions outside it are re-zeroed per layer exactly like
+    positions outside the volume. The sharded executor passes the true
+    volume's extent inside a slab+halo window (core/spatial_shard.py).
     """
     if x.ndim == 4:
         x = x[..., None]
@@ -529,6 +565,7 @@ def meshnet_apply(
     )
     for i, seg in enumerate(pln.segments):
         act = _run_segment(
-            act, seg, pln, i, params, use_affine, fold_affine, interpret
+            act, seg, pln, i, params, use_affine, fold_affine, interpret,
+            z_bounds=z_bounds,
         )
     return act[:, :D, :H, :W, :]

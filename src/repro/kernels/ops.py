@@ -103,6 +103,7 @@ def meshnet_apply_megakernel(
     *,
     vmem_budget: int | None = None,
     interpret: bool | None = None,
+    z_bounds: jax.Array | None = None,
 ) -> jax.Array:
     """Depth-first tiled MeshNet forward (== meshnet.apply, eval mode).
 
@@ -110,6 +111,10 @@ def meshnet_apply_megakernel(
     tile inside a handful of ``pallas_call``s — hidden activations never
     round-trip HBM within a segment (kernels/megakernel.py, EXPERIMENTS.md
     §Perf H9). The "pallas_megakernel" backend of the executor registry.
+
+    ``z_bounds`` (dynamic (2,)-int32) narrows the per-layer zero-masked
+    Z-valid interval — the sharded executor's slab+halo windows pass the
+    true volume extent here (core/spatial_shard.py).
     """
     interpret = _INTERPRET if interpret is None else interpret
     return mega_kernel.meshnet_apply(
@@ -119,6 +124,7 @@ def meshnet_apply_megakernel(
         vmem_budget=vmem_budget or mega_kernel.VMEM_BUDGET,
         interpret=interpret,
         fold_affine=fold_batchnorm if cfg.use_batchnorm else None,
+        z_bounds=z_bounds,
     )
 
 

@@ -9,14 +9,17 @@ pipeline (conform -> crop -> MeshNet -> components), with the memory-budget
 guard choosing full-volume vs failsafe sub-volume mode per request —
 exactly the tool's client-side adaptation logic, server-side. Inference
 dispatches through the executor registry (core/executors.py): the engine's
-PipelineConfig carries a default backend ("auto" -> the depth-first
-megakernel on TPU when its tile plan fits VMEM, else fused Pallas; XLA on
+PipelineConfig carries a default backend ("auto" -> the sharded
+depth-first megakernel on multi-device TPU when the per-slab tile plan
+fits VMEM, the megakernel on one TPU device, else fused Pallas; XLA on
 CPU), and both ``submit`` and the batched ``submit_many`` accept
-per-request mode/executor overrides; the chosen pair — plus the modeled
-HBM bytes the backend's schedule moves (telemetry/traffic.py) — is
+per-request mode/executor/device-count overrides (the Z-slab count of the
+sharded family, core/spatial_shard.py; the engine builds its mesh once at
+construction); the chosen triple — plus the modeled HBM and collective
+halo bytes the backend's schedule moves (telemetry/traffic.py) — is
 recorded in each request's telemetry record. Requests sharing a (mode,
-executor, shape) reuse one compiled executable via the registry's jit
-cache.
+executor, devices, shape) reuse one compiled executable via the
+registry's jit cache.
 
 LMEngine — continuous-batching text generation for any ModelConfig:
 chunked prefill (sequence patching, DESIGN.md §4), ring-buffer KV caches
@@ -245,15 +248,30 @@ class LMEngine:
 class SegmentationEngine:
     """Server-side Brainchop: picks full-volume vs sub-volume ("failsafe")
     mode per request from the memory budget, then runs the pipeline through
-    the chosen executor backend (core/executors.py)."""
+    the chosen executor backend (core/executors.py).
 
-    def __init__(self, params, pipeline_cfg, *, mask_model=None, budget=None):
+    ``devices`` sets the engine's default Z-slab count for the sharded
+    executor family (core/spatial_shard.py) — the mesh is built once at
+    engine construction and shared by every request (the registry's mesh
+    cache keys on the slab count, so per-request overrides that repeat a
+    count also reuse one mesh and one compiled executable)."""
+
+    def __init__(
+        self, params, pipeline_cfg, *, mask_model=None, budget=None, devices=None
+    ):
         from repro.telemetry.budget import MemoryBudget
 
         self.params = params
         self.cfg = pipeline_cfg
         self.mask_model = mask_model
         self.budget = budget or MemoryBudget.v5e()
+        self.devices = devices or getattr(pipeline_cfg, "shard_devices", None)
+        if self.devices and self.devices > 1:
+            # Build (and cache) the engine's Z mesh once, up front — not
+            # lazily inside the first request's trace.
+            from repro.core import spatial_shard
+
+            spatial_shard.mesh_for(self.devices)
         from repro.telemetry.record import TelemetryLog
 
         self.log = TelemetryLog()
@@ -267,11 +285,20 @@ class SegmentationEngine:
         except BudgetExceeded:
             return "subvolume"
 
-    def submit(self, vol: jax.Array, *, mode: str | None = None, executor: str | None = None):
-        """Run one volume. ``mode``/``executor`` override the engine's
-        defaults for this request only; ``mode=None`` keeps the budget-driven
-        failsafe selection and ``executor=None`` keeps the engine config's
-        backend (``"auto"`` resolves per host in the pipeline)."""
+    def submit(
+        self,
+        vol: jax.Array,
+        *,
+        mode: str | None = None,
+        executor: str | None = None,
+        devices: int | None = None,
+    ):
+        """Run one volume. ``mode``/``executor``/``devices`` override the
+        engine's defaults for this request only; ``mode=None`` keeps the
+        budget-driven failsafe selection, ``executor=None`` keeps the
+        engine config's backend (``"auto"`` resolves per host in the
+        pipeline), and ``devices=None`` keeps the engine's slab count
+        (``devices=1`` forces single-device for this request)."""
         import dataclasses as dc
 
         from repro.core import pipeline as pl
@@ -282,6 +309,7 @@ class SegmentationEngine:
             mode=mode,
             budget=self.budget,
             executor=executor or self.cfg.executor,
+            shard_devices=devices if devices is not None else self.devices,
         )
         res = pl.run(cfg, self.params, vol, mask_model=self.mask_model)
         self.log.append(res.record)
@@ -293,14 +321,18 @@ class SegmentationEngine:
         *,
         modes: list[str | None] | None = None,
         executors: list[str | None] | None = None,
+        devices: list[int | None] | None = None,
     ) -> list:
-        """Batched multi-volume submission with per-request mode/executor.
+        """Batched multi-volume submission with per-request mode/executor/
+        device-count selection.
 
         Requests run in submission order; a ``None`` entry in ``modes``
         keeps the budget-driven failsafe selection, a ``None`` entry in
-        ``executors`` keeps the engine config's backend. Requests sharing a
-        (mode, executor, shape) reuse one compiled executable regardless of
-        order, via the registry's ``jitted_apply`` cache. Each telemetry
+        ``executors`` keeps the engine config's backend, and a ``None``
+        entry in ``devices`` keeps the engine's slab count. Requests
+        sharing a (mode, executor, devices, shape) reuse one compiled
+        executable regardless of order, via the registry's ``jitted_apply``
+        cache (and one mesh via the slab-count mesh cache). Each telemetry
         record carries the mode/executor that served it plus the request's
         queue position in ``extra``.
         """
@@ -309,12 +341,15 @@ class SegmentationEngine:
             raise ValueError(f"modes must match len(vols): {len(modes)} != {n}")
         if executors is not None and len(executors) != n:
             raise ValueError(f"executors must match len(vols): {len(executors)} != {n}")
+        if devices is not None and len(devices) != n:
+            raise ValueError(f"devices must match len(vols): {len(devices)} != {n}")
         modes = modes if modes is not None else [None] * n
         execs = executors if executors is not None else [None] * n
+        devs = devices if devices is not None else [None] * n
 
         results = []
         for i, vol in enumerate(vols):
-            res = self.submit(vol, mode=modes[i], executor=execs[i])
+            res = self.submit(vol, mode=modes[i], executor=execs[i], devices=devs[i])
             res.record.extra["request_index"] = i
             results.append(res)
         return results

@@ -47,6 +47,10 @@ class TelemetryRecord:
     # inference (telemetry/traffic.py) — the TPU analogue of the paper
     # tracking texture bandwidth per backend.
     hbm_bytes_modeled: Optional[int] = None
+    # modeled inter-device (ICI) bytes of the run's halo exchanges — 0 for
+    # single-device executors, the traffic.meshnet_collective_bytes model
+    # for the sharded family (core/spatial_shard.py, DESIGN.md §2.2).
+    collective_bytes_modeled: Optional[int] = None
     fail_type: Optional[str] = None
     crop_size: Optional[tuple] = None
     # device context (the simulator's stand-ins for GPU card / texture size)

@@ -171,7 +171,67 @@ def meshnet_megakernel_bytes(
     return pln.hbm_bytes(batch=batch, dtype_bytes=dtype_bytes)
 
 
-#: executor name -> modeled-bytes fn, the mapping the registry wires up.
+def meshnet_collective_bytes(
+    cfg, vol: Shape3, num_devices: int, batch: int = 1, dtype_bytes: int = 4
+) -> int:
+    """Modeled inter-device (ICI) bytes of one Z-sharded forward
+    (core/spatial_shard.py, DESIGN.md §2.2).
+
+    Each of the ``num_devices - 1`` slab boundaries exchanges, summed over
+    the layer-wise schedule, ``2 * sum(dilations)`` Z-slices of the hidden
+    activation in each direction:
+
+        per_boundary = 2 * sum(dilations) * H * W * C_hidden * dtype
+
+    (the one-shot RF-radius fetch of the megakernel inner moves the same
+    slice count once, at the input channel width — this single formula is
+    the accounting convention for the whole family). Zero at one device;
+    monotone in device count (tests/test_properties.py)."""
+    n = int(num_devices)
+    if n <= 1:
+        return 0
+    _, h, w = (int(s) for s in vol)
+    per_boundary = 2 * sum(cfg.dilations) * h * w * cfg.channels * dtype_bytes
+    return batch * (n - 1) * per_boundary
+
+
+def meshnet_sharded_bytes(
+    inner: str,
+    cfg,
+    vol: Shape3,
+    num_devices: int,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+) -> int:
+    """Modeled HBM bytes of one Z-sharded forward: every device runs the
+    inner schedule on its slab, so the total is ``n`` times the inner
+    model priced at the per-device window. The megakernel inner plans on
+    the slab plus its one-shot RF-radius halo (that window is what its
+    tiles actually read); the layer-wise inners are priced at the bare
+    slab — their halo traffic crosses ICI, not HBM, and is accounted by
+    ``meshnet_collective_bytes``. Per-device HBM = this / n
+    (EXPERIMENTS.md §Perf H10)."""
+    n = int(num_devices)
+    d, h, w = (int(s) for s in vol)
+    if d % n:
+        from repro.core.spatial_shard import ShardGeometryError
+
+        raise ShardGeometryError(f"Z dim {d} not divisible by {n} slabs")
+    dloc = d // n
+    if inner == "pallas_megakernel":
+        radius = sum(cfg.dilations)
+        per_dev = meshnet_megakernel_bytes(
+            cfg, (dloc + 2 * radius, h, w), batch=batch, dtype_bytes=dtype_bytes
+        )
+    else:
+        fn = EXECUTOR_MODELS[inner]
+        per_dev = fn(cfg, (dloc, h, w), batch=batch, dtype_bytes=dtype_bytes)
+    return n * per_dev
+
+
+#: executor name -> modeled-bytes fn, the mapping the registry wires up
+#: (base backends; the sharded family prices itself via
+#: ``meshnet_sharded_bytes`` with its inner name and slab count).
 EXECUTOR_MODELS = {
     "xla": meshnet_xla_bytes,
     "pallas_fused": meshnet_fused_bytes,

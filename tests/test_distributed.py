@@ -7,6 +7,11 @@ deselect lists): forcing 8 host-platform devices onto one physical core
 makes the subprocess workloads pathologically slow/flaky, and the claims
 under test (halo exchange, GSPMD value preservation) are multi-device
 claims — H6 in EXPERIMENTS.md is explicitly "requires multi-device".
+
+The CI ``distributed`` job opts back in by forcing 8 host devices on the
+pytest process itself (so ``jax.device_count() >= 2`` and the skip lifts)
+and sets ``REPRO_SMALL_SHAPES=1``, which shrinks the subprocess workloads
+to shapes a single shared core can turn around quickly.
 """
 
 import os
@@ -40,13 +45,17 @@ def test_spatial_shard_halo_inference_bit_exact():
     == single-device full-volume inference, bit-exact."""
     out = _run(
         """
+import os
 import jax, jax.numpy as jnp
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 from repro.core import meshnet, spatial_shard
 from repro.core.meshnet import MeshNetConfig
 cfg = MeshNetConfig()
 p = meshnet.init(jax.random.PRNGKey(0), cfg)
-x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16, 16))
+# the small shape's 8-thick slabs are thinner than the d=16 halo, so the
+# CI knob also exercises the multi-hop exchange through this API
+shape = (2, 32, 8, 8) if os.environ.get("REPRO_SMALL_SHAPES") == "1" else (2, 64, 16, 16)
+x = jax.random.normal(jax.random.PRNGKey(1), shape)
 ref = meshnet.apply(p, x, cfg)
 out = jax.jit(lambda p_, x_: spatial_shard.sharded_apply(p_, x_, cfg, mesh))(p, x)
 print("MAXERR", float(jnp.abs(ref - out).max()))
@@ -58,7 +67,17 @@ print("MAXERR", float(jnp.abs(ref - out).max()))
 
 def test_sharded_train_step_matches_single_device():
     """One train step of the smoke tinyllama on an 8-device mesh equals the
-    single-logical-device result (GSPMD semantics are value-preserving)."""
+    single-logical-device result (GSPMD semantics are value-preserving).
+
+    Tolerances: sharding reorders float reductions, so the loss agrees to
+    ~1e-4 relative, not bitwise; and one *Adam* step amplifies any grad
+    element whose sign flips under that reordering into a ±lr parameter
+    delta (at step 1, update = lr*sign(g) elementwise). The param bound
+    is therefore 2*lr — tight enough to catch any wrong collective (those
+    diverge at O(1e-1)), loose enough for float reordering.
+    (REPRO_SMALL_SHAPES deliberately does not shrink T here: T=8 exposes
+    a separate short-sequence divergence in the transformer stack,
+    tracked independently of the GSPMD claim.)"""
     out = _run(
         """
 import dataclasses, jax, jax.numpy as jnp
@@ -92,8 +111,9 @@ print("PARAMDIFF", d)
     )
     loss_diff = float(out.split("LOSSDIFF")[1].split()[0])
     param_diff = float(out.split("PARAMDIFF")[1].split()[0])
-    assert loss_diff < 1e-4, loss_diff
-    assert param_diff < 1e-4, param_diff
+    assert loss_diff < 1e-3, loss_diff
+    lr = 3e-4  # steps_mod.OPT_CONFIG learning rate; see docstring
+    assert param_diff <= 2 * lr * 1.01, param_diff
 
 
 def test_sharded_decode_matches_single_device():

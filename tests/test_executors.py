@@ -91,6 +91,84 @@ class TestRegistry:
         finally:
             executors._REGISTRY.pop("_test_unmodeled")
 
+    def test_sharded_family_registered(self):
+        assert {
+            "sharded_xla", "sharded_pallas_fused", "sharded_pallas_megakernel"
+        } <= set(executors.names())
+
+    def test_sharded_name_parse_roundtrip(self):
+        assert executors.sharded_name("xla") == "sharded_xla"
+        assert executors.sharded_name("pallas_fused", 4) == "sharded_pallas_fused@4"
+        assert executors.parse_sharded("sharded_pallas_fused@4") == ("pallas_fused", 4)
+        assert executors.parse_sharded("sharded_xla") == ("xla", None)
+        assert executors.parse_sharded("xla") is None
+        assert executors.inner_of("sharded_pallas_megakernel@8") == "pallas_megakernel"
+        assert executors.inner_of("streaming") == "streaming"
+
+    def test_pinned_sharded_name_registers_on_demand(self):
+        # "@n" names are valid executor strings anywhere a name is accepted
+        name = executors.resolve("sharded_xla@4")
+        assert name == "sharded_xla@4" and name in executors.names()
+
+    def test_unknown_sharded_inner_raises(self):
+        with pytest.raises(KeyError, match="sharded inner"):
+            executors.resolve("sharded_webgl")
+        with pytest.raises(KeyError, match="cannot be sharded"):
+            executors.ensure_sharded("streaming", 2)
+
+    @pytest.mark.parametrize("bad", ["sharded_xla@two", "sharded_xla@0", "sharded_xla@-2"])
+    def test_bad_sharded_slab_count_raises_keyerror(self, bad):
+        with pytest.raises(KeyError, match="positive integer"):
+            executors.resolve(bad)
+
+    def test_sharded_auto_policy(self):
+        # multi-device TPU with a plannable per-slab window -> sharded
+        # megakernel (pinned to the validated count when the caller pins
+        # one); indivisible Z falls back to the single-device ladder.
+        cfg = MeshNetConfig()
+        assert (
+            executors.default_executor(cfg, (256, 256, 256), backend="tpu", num_devices=8)
+            == "sharded_pallas_megakernel@8"
+        )
+        assert (
+            executors.default_executor(cfg, (250, 256, 256), backend="tpu", num_devices=8)
+            == "pallas_megakernel"
+        )
+        assert (
+            executors.default_executor(cfg, (256, 256, 256), backend="tpu", num_devices=1)
+            == "pallas_megakernel"
+        )
+
+    def test_sharded_modeled_bytes(self):
+        # HBM: n x the inner model on the per-device window; collective:
+        # zero at one slab, positive per extra boundary, zero for
+        # single-device backends. Pure models — no devices needed.
+        cfg = MeshNetConfig(dilations=(1, 2, 4))
+        vol = (32, 16, 16)
+        assert executors.modeled_collective_bytes("xla", cfg, vol) == 0
+        assert executors.modeled_collective_bytes("sharded_xla@4", cfg, vol) > 0
+        hbm = executors.modeled_hbm_bytes("sharded_pallas_megakernel@4", cfg, vol)
+        assert hbm is not None and hbm > 0
+
+    def test_sharded_requires_divisible_z(self):
+        # the geometry check fires before any device/mesh is touched, so
+        # this runs on single-device hosts too
+        cfg = MeshNetConfig(dilations=(1, 2))
+        p = meshnet.init(KEY, cfg)
+        x = jnp.zeros((1, 9, 8, 8))
+        with pytest.raises(ValueError, match="divisible"):
+            executors.apply("sharded_xla@2", p, x, cfg)
+
+    def test_sharded_single_device_parity(self):
+        # The degenerate one-slab mesh still runs the whole wrapper path
+        # (exchange == zero padding), so tier-1 covers the plumbing.
+        cfg = MeshNetConfig(dilations=(1, 2, 4))
+        p = meshnet.init(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 12, 10, 10))
+        ref = executors.apply("xla", p, x, cfg)
+        got = executors.apply("sharded_xla@1", p, x, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
     def test_list_dilations_config_crosses_jit_boundary(self):
         # cfg is a static jit argument in jitted_apply; list dilations must
         # be normalised to a hashable tuple by MeshNetConfig.__post_init__.
@@ -149,7 +227,8 @@ class TestPipelineDispatch:
         return params, vol
 
     @pytest.mark.parametrize(
-        "executor", ["xla", "pallas_fused", "pallas_megakernel", "streaming"]
+        "executor",
+        ["xla", "pallas_fused", "pallas_megakernel", "streaming", "sharded_xla"],
     )
     @pytest.mark.parametrize("mode", ["full", "subvolume", "streaming"])
     def test_all_modes_all_executors(self, mode, executor):
@@ -163,6 +242,68 @@ class TestPipelineDispatch:
         assert res.segmentation.shape == (16, 16, 16)
         assert res.record.executor == executor  # recorded in telemetry
         assert res.record.hbm_bytes_modeled > 0  # bytes-moved telemetry
+        # collective bytes stamped on every run: 0 unless >1 slab is real
+        if executor == "sharded_xla" and jax.device_count() > 1:
+            assert res.record.collective_bytes_modeled > 0
+        else:
+            assert res.record.collective_bytes_modeled == 0
+
+    def test_sharded_without_devices_fails_record_not_raises(self):
+        # a slab count the host can't provide keeps the never-raises
+        # telemetry contract: status='fail', not an exception
+        params, vol = self._setup()
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode="full",
+            min_component_size=4, executor="sharded_xla@64",
+        )
+        res = pipeline.run(pc, params, vol)
+        assert res.record.status == "fail"
+        assert res.record.fail_type == "shard_geometry"
+        assert res.segmentation is None
+
+    def test_pinned_executor_wins_over_shard_devices_default(self):
+        # an explicitly pinned "@n" is not silently re-wrapped by the
+        # engine/pipeline default slab count — it fails honestly instead
+        params, vol = self._setup()
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode="full",
+            min_component_size=4, executor="sharded_xla@64", shard_devices=1,
+        )
+        # devices=1 explicitly forces single-device, even over a pin
+        res = pipeline.run(pc, params, vol)
+        assert res.record.status == "ok" and res.record.executor == "xla"
+        pc2 = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode="full",
+            min_component_size=4, executor="sharded_xla@64", shard_devices=2,
+        )
+        res2 = pipeline.run(pc2, params, vol)
+        assert res2.record.executor == "sharded_xla@64"
+        assert res2.record.status == "fail"
+        assert res2.record.fail_type == "shard_geometry"
+
+    def test_shard_devices_one_forces_single_device(self):
+        # devices=1 unwraps a sharded executor back to its inner backend
+        params, vol = self._setup()
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode="full",
+            min_component_size=4, executor="sharded_xla", shard_devices=1,
+        )
+        res = pipeline.run(pc, params, vol)
+        assert res.record.status == "ok"
+        assert res.record.executor == "xla"
+
+    def test_shard_devices_keeps_unshardeable_executor_single_device(self):
+        # streaming has no sharded form: a slab-count request runs it
+        # single-device instead of failing the request
+        params, vol = self._setup()
+        pc = PipelineConfig(
+            model=SMALL, volume_shape=(16, 16, 16), mode="full",
+            min_component_size=4, executor="streaming", shard_devices=2,
+        )
+        res = pipeline.run(pc, params, vol)
+        assert res.record.status == "ok"
+        assert res.record.executor == "streaming"
+        assert res.record.collective_bytes_modeled == 0
 
     def test_executors_agree_on_segmentation(self):
         params, vol = self._setup()

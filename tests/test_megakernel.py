@@ -167,6 +167,11 @@ class TestTrafficModel:
 
     def test_registry_exposes_bytes_for_all_builtins(self):
         for name in executors.names():
+            if "@" in name:
+                # pinned sharded specs ("sharded_xla@64") are registered
+                # on demand by requests/tests, not builtins — their slab
+                # count need not divide this probe volume
+                continue
             b = executors.modeled_hbm_bytes(name, SMALL, (32, 32, 32))
             assert b is not None and b > 0, name
 

@@ -8,9 +8,10 @@ import pytest
 pytest.importorskip("hypothesis", reason="optional dep: pip install hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import components, cropping, patching
+from repro.core import components, cropping, patching, spatial_shard
 from repro.core.meshnet import MeshNetConfig
 from repro.core import meshnet
+from repro.telemetry import traffic
 from repro.training import losses
 
 SETTINGS = dict(max_examples=20, deadline=None)
@@ -47,6 +48,100 @@ def test_cubedivider_read_size_static(cube, overlap):
     assert rs == (cube + 2 * overlap,) * 3
     for c in divider.split(jnp.zeros((16, 16, 16))):
         assert c.shape == rs
+
+
+# ----------------------------------------------------------- halo exchange ---
+
+
+def _sharded(fn, x):
+    """Run fn per-slab over all local devices (1 in tier-1; 8 in the CI
+    distributed job, where the multi-hop path is real)."""
+    mesh = spatial_shard.mesh_for(jax.device_count())
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(None, "z", None, None, None)
+    return spatial_shard._shard_map(
+        fn, mesh=mesh, in_specs=(spec,), out_specs=spec
+    )(x)
+
+
+def _valid_tap(y, h):
+    """A radius-h two-tap *valid* stencil: the linear, zero-preserving
+    stand-in for a dilated conv layer (consumes h context per side)."""
+    return y[:, : y.shape[1] - 2 * h] + y[:, 2 * h :]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    radii=st.lists(st.integers(1, 4), min_size=1, max_size=3),
+    dloc=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_halo_exchange_composes(radii, dloc, seed):
+    """Layer-wise exchange == one-shot exchange of the summed halo: n
+    per-layer exchanges of h_i provide exactly the context of a single
+    (multi-hop when sum > slab) exchange of sum(h_i), *provided* the
+    one-shot schedule re-zeroes out-of-volume positions after every layer
+    — a stencil layer writes combinations of in-volume data into the
+    beyond-the-volume halo, which the next layer must read as zeros. This
+    is the equivalence the sharded executor family is built on (XLA inner
+    = layer-wise, megakernel inner = one-shot + per-layer ``z_bounds``
+    masking, core/spatial_shard.py), and both must equal the unsharded
+    'same'-padded stencil: pod edges receive zeros == the volume's zero
+    padding."""
+    n = jax.device_count()
+    D = n * dloc
+    total = sum(radii)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, D, 2, 2, 1))
+
+    def layerwise(xs):
+        # fresh exchange per layer: pod edges are re-zeroed for free
+        for h in radii:
+            xs = _valid_tap(spatial_shard.halo_exchange_z(xs, h, "z"), h)
+        return xs
+
+    def oneshot(xs):
+        idx = jax.lax.axis_index("z")
+        xs = spatial_shard.halo_exchange_z(xs, total, "z")
+        cum = 0
+        for h in radii:
+            xs = _valid_tap(xs, h)
+            cum += h
+            # re-zero out-of-volume positions (megakernel z_bounds trick):
+            # local j holds global idx*dloc - (total - cum) + j
+            g = idx * dloc - (total - cum) + jnp.arange(xs.shape[1])
+            mask = (g >= 0) & (g < D)
+            xs = xs * mask[None, :, None, None, None]
+        return xs
+
+    ref = x
+    for h in radii:  # the unsharded 'same'-padded stencil
+        ref = _valid_tap(jnp.pad(ref, [(0, 0), (h, h), (0, 0), (0, 0), (0, 0)]), h)
+
+    got_layer = _sharded(layerwise, x)
+    got_oneshot = _sharded(oneshot, x)
+    np.testing.assert_allclose(np.asarray(got_layer), np.asarray(ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_oneshot), np.asarray(ref), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 64),
+    w=st.integers(1, 64),
+    channels=st.integers(1, 32),
+    batch=st.integers(1, 4),
+)
+def test_collective_bytes_monotone_and_zero_at_one(h, w, channels, batch):
+    """The sharded family's ICI model (traffic.meshnet_collective_bytes):
+    zero on one device, strictly increasing with slab count (each extra
+    boundary adds one halo exchange)."""
+    cfg = MeshNetConfig(channels=channels)
+    vals = [
+        traffic.meshnet_collective_bytes(cfg, (64, h, w), n, batch=batch)
+        for n in range(1, 10)
+    ]
+    assert vals[0] == 0
+    assert all(b > a for a, b in zip(vals, vals[1:]))
 
 
 # ------------------------------------------------------------- components ---
