@@ -35,6 +35,11 @@ EXEC_BENCH_MODELS = ("gwm_light", "subvolume_gwm_failsafe")
 # Every executor with a traffic model, timed head-to-head.
 EXEC_BENCH_BACKENDS = ("xla", "pallas_fused", "pallas_megakernel")
 
+# Storage policies priced (and spot-timed) per backend — "fp32" rows keep
+# their legacy un-suffixed key names so the regression gate diffs
+# like-for-like; reduced policies get "@<precision>" keys.
+BENCH_PRECISIONS = ("bf16", "int8w")
+
 Row = tuple[str, float, "int | None", str]
 
 
@@ -116,6 +121,24 @@ def bench_executors(
             rows.append(
                 (f"meshnet_{name}_{exec_name}_{side}cube", _time(fn, vol, iters=iters), hbm, note)
             )
+    # precision spot-checks: the headline model through the megakernel at
+    # each reduced policy (same volume, same cached-jit dispatch path)
+    cfg = PAPER_MODELS[models[0]]
+    p = meshnet.init(KEY, cfg)
+    for prec in BENCH_PRECISIONS:
+        jf = executors.jitted_apply("pallas_megakernel", precision=prec)
+        fn = lambda v, jf=jf, p=p, cfg=cfg: jf(p, v, cfg)
+        hbm = executors.modeled_hbm_bytes(
+            "pallas_megakernel", cfg, (side,) * 3, precision=prec
+        )
+        rows.append(
+            (
+                f"meshnet_{models[0]}_pallas_megakernel_{side}cube@{prec}",
+                _time(fn, vol, iters=iters),
+                hbm,
+                f"precision policy {prec} (kernels/quantize.py)",
+            )
+        )
     return rows
 
 
@@ -150,6 +173,18 @@ def bench_traffic(
                 fused = executors.modeled_hbm_bytes("pallas_fused", cfg, vol)
                 note += f"; {fused / hbm:.1f}x under pallas_fused"
             rows.append((f"hbm_{name}_{side}_{exec_name}", 0.0, hbm, note))
+            # per-precision rows (EXPERIMENTS.md H11): the acceptance
+            # gate reads the megakernel ratios off this table
+            for prec in BENCH_PRECISIONS:
+                hb = executors.modeled_hbm_bytes(
+                    exec_name, cfg, vol, precision=prec
+                )
+                pn = f"modeled at {side}^3; precision {prec}"
+                if hb is not None and hbm:
+                    pn += f", {hb / hbm:.2f}x of fp32"
+                rows.append(
+                    (f"hbm_{name}_{side}_{exec_name}@{prec}", 0.0, hb, pn)
+                )
         # the sharded family (DESIGN.md §2.2): per-device HBM shrinks with
         # the slab count while the ICI halo bill grows one boundary at a
         # time — both modeled, so this prices the paper volume anywhere.
@@ -165,4 +200,21 @@ def bench_traffic(
                     f"{coll} ICI halo bytes total (EXPERIMENTS.md H10)",
                 )
             )
+        # the sharded megakernel under int8w: int8 one-shot input fetch +
+        # per-slab int8 staging plans. The ICI bill keeps the family-wide
+        # activation-width convention (conservative for the int8 fetch —
+        # DESIGN.md §2.3).
+        hbm = traffic.meshnet_sharded_bytes(
+            "pallas_megakernel", cfg, vol, 8, precision="int8w"
+        )
+        coll = traffic.meshnet_collective_bytes(cfg, vol, 8, precision="int8w")
+        rows.append(
+            (
+                f"hbm_{name}_{side}_sharded_pallas_megakernel@8@int8w",
+                0.0,
+                hbm,
+                f"modeled at {side}^3; precision int8w, {coll} ICI halo "
+                "bytes (activation-width convention)",
+            )
+        )
     return rows

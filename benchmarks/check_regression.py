@@ -26,6 +26,12 @@ must not require a two-step dance. A per-key delta table is always
 printed so the artifact log shows *what* moved, not just that something
 did.
 
+Precision keys: rows measured under a reduced storage policy carry an
+``@<precision>`` suffix (``hbm_gwm_light_256_pallas_megakernel@int8w``)
+while fp32 rows keep their legacy un-suffixed names — so the per-key
+diff above always compares like-for-like precision (an int8w run can
+never mask an fp32 regression, and vice versa).
+
 Usage:
     python benchmarks/check_regression.py FRESH.json [--baseline BENCH_2.json]
                                           [--us-tol 0.25]

@@ -5,10 +5,14 @@ Sections:
   [kernels]       Pallas vs oracle micro-benchmarks (us_per_call)
   [executors]     registry head-to-head: xla vs pallas_fused vs
                   pallas_megakernel end-to-end MeshNet forward per paper
-                  model (core/executors.py)
+                  model (core/executors.py), plus megakernel spot rows at
+                  each reduced precision policy ("@bf16"/"@int8w" keys)
   [traffic]       modeled HBM bytes per forward at the paper's 256^3
                   volume for every registered executor (EXPERIMENTS.md
-                  §Perf H9: megakernel >= 5x under pallas_fused)
+                  §Perf H9: megakernel >= 5x under pallas_fused) and
+                  every precision policy (H11: int8w <= 0.4x, bf16 <=
+                  0.55x of fp32 on the megakernel; fp32 keys stay
+                  un-suffixed so the gate diffs like-for-like)
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)

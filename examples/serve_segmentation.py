@@ -38,15 +38,31 @@ for i in range(4):
     vols.append(vol)
 
 # Batched submission: requests run in order, and any that share a
-# (mode, executor, shape) reuse one compiled executable via the registry's
-# jit cache. The last request pins the explicit streaming executor; the
-# rest use the engine default ("auto").
-results = engine.submit_many(vols, executors=[None, None, None, "streaming"])
+# (mode, executor, precision, shape) reuse one compiled executable via the
+# registry's jit cache. The last request pins the explicit streaming
+# executor; the rest use the engine default ("auto"). Per-request
+# ``precisions`` picks the storage policy (DESIGN.md §2.3): the bf16 and
+# int8w requests stream 2x/4x fewer modeled HBM bytes — weights are
+# quantized once per policy and cached by the engine.
+results = engine.submit_many(
+    vols,
+    executors=[None, None, None, "streaming"],
+    precisions=[None, "bf16", "int8w", None],
+)
 for i, res in enumerate(results):
     t = res.record.times
     print(f"request {i}: {res.record.status:4s} mode={res.record.mode:10s} "
           f"executor={res.record.executor:12s} "
+          f"precision={res.record.precision:5s} "
+          f"hbm~{(res.record.hbm_bytes_modeled or 0)/2**20:.0f}MiB "
           f"inference {t.inference:.2f}s postprocess {t.postprocessing:.2f}s")
 
 print(f"\nfleet success rate: {engine.log.success_rate()*100:.0f}% "
       f"({len(engine.log.records)} requests)")
+
+# The fleet view per (executor, precision) cell (telemetry/analysis.py):
+from repro.telemetry import analysis  # noqa: E402
+
+print("\nexecutor,precision,runs,ok_rate,hbm_bytes,collective_bytes,params_bytes")
+for cell in analysis.precision_summary(engine.log.records):
+    print(cell.row())

@@ -70,13 +70,16 @@ import jax
 
 from repro.core import meshnet, spatial_shard, streaming
 from repro.core.meshnet import MeshNetConfig
-from repro.kernels import megakernel, ops
+from repro.kernels import megakernel, ops, quantize
 from repro.telemetry import traffic
 
-# (params, x, cfg) -> logits; x (B, D, H, W[, C]) -> (B, D, H, W, classes)
-ApplyFn = Callable[[Any, jax.Array, MeshNetConfig], jax.Array]
+# (params, x, cfg, precision) -> logits; x (B, D, H, W[, C]) ->
+# (B, D, H, W, classes). ``precision`` is the storage policy
+# (kernels/quantize.py: "fp32" | "bf16" | "int8w"); params may arrive raw
+# fp32 or already prepared (quantize.prepare_params is idempotent).
+ApplyFn = Callable[[Any, jax.Array, MeshNetConfig, str], jax.Array]
 
-# (cfg, volume_shape, batch) -> modeled HBM bytes per forward, or None.
+# (cfg, volume_shape, batch, precision) -> modeled HBM bytes, or None.
 BytesFn = Callable[..., Optional[int]]
 
 
@@ -84,14 +87,20 @@ BytesFn = Callable[..., Optional[int]]
 class ExecutorSpec:
     """One inference backend.
 
-    ``apply`` is the uniform whole-batch forward. ``streaming_apply`` is the
-    schedule mode="streaming" uses — for the fused paths it is the same
-    function, because per-layer/per-tile fusion already yields the
-    two-live-buffer schedule (each layer's activation is consumed by
-    exactly one next call). ``hbm_bytes(cfg, vol, batch=1)`` prices the
-    schedule's HBM traffic (telemetry/traffic.py); None if unmodeled.
-    ``collective_bytes(cfg, vol, batch=1)`` prices inter-device halo
-    traffic — None for single-device backends (modeled as zero).
+    ``apply`` is the uniform whole-batch forward — every backend takes a
+    ``precision`` keyword (the policy of kernels/quantize.py) and must
+    hold the parity gates per policy: bf16 logits within 1e-2 of fp32,
+    int8w segmentation-dice >= 0.99 of fp32 (tests/test_precision.py).
+    ``streaming_apply`` is the schedule mode="streaming" uses — for the
+    fused paths it is the same function, because per-layer/per-tile
+    fusion already yields the two-live-buffer schedule (each layer's
+    activation is consumed by exactly one next call).
+    ``hbm_bytes(cfg, vol, batch=1, precision="fp32")`` prices the
+    schedule's HBM traffic at the policy's byte widths
+    (telemetry/traffic.py); None if unmodeled.
+    ``collective_bytes(cfg, vol, batch=1, precision="fp32")`` prices
+    inter-device halo traffic — None for single-device backends (modeled
+    as zero); reduced precisions ship bf16/int8 halos.
     """
 
     name: str
@@ -111,8 +120,8 @@ AUTO = "auto"
 def register(spec: ExecutorSpec) -> ExecutorSpec:
     _REGISTRY[spec.name] = spec
     # Evict only this spec's compiled wrappers; other backends stay hot.
-    for schedule in ("apply", "streaming"):
-        _JIT_CACHE.pop((spec.name, schedule), None)
+    for key in [k for k in _JIT_CACHE if k[0] == spec.name]:
+        _JIT_CACHE.pop(key, None)
     return spec
 
 
@@ -168,18 +177,22 @@ def shardable(name: str) -> bool:
 
 
 def _make_sharded_spec(inner: str, num_devices: Optional[int]) -> ExecutorSpec:
-    def _apply(params, x, cfg):
+    def _apply(params, x, cfg, precision: str = "fp32"):
         return spatial_shard.sharded_executor_apply(
-            inner, params, x, cfg, num_devices=num_devices
+            inner, params, x, cfg, num_devices=num_devices, precision=precision
         )
 
-    def _hbm(cfg, vol, batch: int = 1):
+    def _hbm(cfg, vol, batch: int = 1, precision: str = "fp32"):
         n = num_devices or jax.device_count()
-        return traffic.meshnet_sharded_bytes(inner, cfg, vol, n, batch=batch)
+        return traffic.meshnet_sharded_bytes(
+            inner, cfg, vol, n, batch=batch, precision=precision
+        )
 
-    def _collective(cfg, vol, batch: int = 1):
+    def _collective(cfg, vol, batch: int = 1, precision: str = "fp32"):
         n = num_devices or jax.device_count()
-        return traffic.meshnet_collective_bytes(cfg, vol, n, batch=batch)
+        return traffic.meshnet_collective_bytes(
+            cfg, vol, n, batch=batch, precision=precision
+        )
 
     slabs = f"{num_devices} Z-slabs" if num_devices else "one Z-slab per device"
     return ExecutorSpec(
@@ -218,6 +231,7 @@ def default_executor(
     *,
     backend: Optional[str] = None,
     num_devices: Optional[int] = None,
+    precision: str = "fp32",
 ) -> str:
     """The production default. On TPU: the sharded depth-first megakernel
     when more than one device is attached, the volume's Z dim divides
@@ -225,8 +239,10 @@ def default_executor(
     VMEM budget; on a single device, the megakernel when its plan fits,
     else the per-layer fused path; without a model to plan for, the fused
     path. On CPU hosts: XLA (Pallas interpret mode is a correctness path,
-    far too slow to serve). ``backend``/``num_devices`` override the host
-    introspection (tests pin them)."""
+    far too slow to serve). Plans are judged at the request's resolved
+    ``precision`` — a bf16/int8 working set can fit where fp32 does not.
+    ``backend``/``num_devices`` override the host introspection (tests
+    pin them)."""
     backend = backend or jax.default_backend()
     if backend != "tpu":
         return "xla"
@@ -238,7 +254,7 @@ def default_executor(
         radius = sum(model.dilations)
         slab = (vol[0] // n + 2 * radius, vol[1], vol[2])
         try:
-            megakernel.plan_for_config(model, slab)
+            megakernel.plan_for_config(model, slab, precision=precision)
             # an explicit device count pins the spec ("@n"), so the
             # geometry validated here is the geometry that executes; the
             # introspected count stays unpinned (same n at run time).
@@ -246,7 +262,7 @@ def default_executor(
         except ValueError:
             pass
     try:
-        megakernel.plan_for_config(model, vol)
+        megakernel.plan_for_config(model, vol, precision=precision)
         return "pallas_megakernel"
     except ValueError:
         return "pallas_fused"
@@ -256,12 +272,14 @@ def resolve(
     name: Optional[str],
     model: Optional[MeshNetConfig] = None,
     volume_shape: Optional[tuple[int, int, int]] = None,
+    precision: str = "fp32",
 ) -> str:
-    """Map None/"auto" to the backend default (model/shape aware when the
-    caller can supply them); validate explicit names. Sharded-family names
-    (``sharded_<inner>[@n]``) register their spec on first use."""
+    """Map None/"auto" to the backend default (model/shape/precision aware
+    when the caller can supply them); validate explicit names. Sharded-
+    family names (``sharded_<inner>[@n]``) register their spec on first
+    use."""
     if name is None or name == AUTO:
-        return default_executor(model, volume_shape)
+        return default_executor(model, volume_shape, precision=precision)
     if name not in _REGISTRY:
         parsed = parse_sharded(name)  # KeyError on a bad sharded inner
         if parsed is not None:
@@ -277,10 +295,16 @@ def get(name: Optional[str]) -> ExecutorSpec:
     return _REGISTRY[resolve(name)]
 
 
-def apply(name: Optional[str], params, x: jax.Array, cfg: MeshNetConfig) -> jax.Array:
+def apply(
+    name: Optional[str],
+    params,
+    x: jax.Array,
+    cfg: MeshNetConfig,
+    precision: str = "fp32",
+) -> jax.Array:
     """One-shot dispatch: run ``x`` through the named executor (eager —
     composable under an outer jit; use ``jitted_apply`` on hot paths)."""
-    return get(name).apply(params, x, cfg)
+    return get(name).apply(params, x, cfg, precision=precision)
 
 
 def modeled_hbm_bytes(
@@ -288,13 +312,15 @@ def modeled_hbm_bytes(
     cfg: MeshNetConfig,
     volume_shape: tuple[int, int, int],
     batch: int = 1,
+    precision: str = "fp32",
 ) -> Optional[int]:
     """Modeled HBM bytes of one forward under the named executor's
-    schedule, or None if the backend has no traffic model."""
-    spec = _REGISTRY[resolve(name, cfg, volume_shape)]
+    schedule at the given precision policy, or None if the backend has no
+    traffic model."""
+    spec = _REGISTRY[resolve(name, cfg, volume_shape, precision)]
     if spec.hbm_bytes is None:
         return None
-    return spec.hbm_bytes(cfg, volume_shape, batch=batch)
+    return spec.hbm_bytes(cfg, volume_shape, batch=batch, precision=precision)
 
 
 def modeled_collective_bytes(
@@ -302,36 +328,46 @@ def modeled_collective_bytes(
     cfg: MeshNetConfig,
     volume_shape: tuple[int, int, int],
     batch: int = 1,
+    precision: str = "fp32",
 ) -> int:
     """Modeled inter-device halo bytes of one forward under the named
     executor — 0 for single-device backends, the
-    ``traffic.meshnet_collective_bytes`` model for the sharded family.
-    Stamped on every pipeline run next to ``hbm_bytes_modeled``."""
-    spec = _REGISTRY[resolve(name, cfg, volume_shape)]
+    ``traffic.meshnet_collective_bytes`` model for the sharded family
+    (reduced precisions ship narrower halos). Stamped on every pipeline
+    run next to ``hbm_bytes_modeled``."""
+    spec = _REGISTRY[resolve(name, cfg, volume_shape, precision)]
     if spec.collective_bytes is None:
         return 0
-    return spec.collective_bytes(cfg, volume_shape, batch=batch)
+    return spec.collective_bytes(
+        cfg, volume_shape, batch=batch, precision=precision
+    )
 
 
-_JIT_CACHE: dict[tuple[str, str], Callable] = {}
+_JIT_CACHE: dict[tuple[str, str, str], Callable] = {}
 
 
-def _jitted(name: str, schedule: str):
-    key = (name, schedule)
+def _jitted(name: str, schedule: str, precision: str):
+    key = (name, schedule, precision)
     if key not in _JIT_CACHE:
         spec = _REGISTRY[name]
         fn = spec.apply if schedule == "apply" else spec.streaming_apply
+
+        def bound(params, x, cfg, _fn=fn, _p=precision):
+            return _fn(params, x, cfg, precision=_p)
+
         # cfg is a frozen (hashable) dataclass -> static, so one executable
-        # is compiled per (executor, schedule, cfg, input shape) and shared
-        # by every pipeline run and serving request that matches.
-        _JIT_CACHE[key] = jax.jit(fn, static_argnums=(2,))
+        # is compiled per (executor, schedule, precision, cfg, input shape)
+        # and shared by every pipeline run and serving request that matches.
+        _JIT_CACHE[key] = jax.jit(bound, static_argnums=(2,))
     return _JIT_CACHE[key]
 
 
 def jitted_apply(
-    name: Optional[str], schedule: str = "apply"
+    name: Optional[str], schedule: str = "apply", precision: str = "fp32"
 ) -> Callable[[Any, jax.Array, MeshNetConfig], jax.Array]:
-    """Jit-compiled executor forward, cached per (executor, schedule).
+    """Jit-compiled executor forward, cached per (executor, schedule,
+    precision) — the returned callable keeps the 3-arg ``(params, x,
+    cfg)`` signature, with the precision policy bound in.
 
     This is the dispatch point for hot paths (pipeline.run, the engine,
     sub-volume closures): repeated calls — and batched serving requests in
@@ -341,7 +377,8 @@ def jitted_apply(
     """
     if schedule not in ("apply", "streaming"):
         raise ValueError(f"schedule must be 'apply' or 'streaming', got {schedule!r}")
-    return _jitted(resolve(name), schedule)
+    quantize.validate(precision)
+    return _jitted(resolve(name), schedule, precision)
 
 
 def make_infer(
@@ -349,6 +386,7 @@ def make_infer(
     params,
     cfg: MeshNetConfig,
     volume_shape: Optional[tuple[int, int, int]] = None,
+    precision: str = "fp32",
 ) -> Callable[[jax.Array], jax.Array]:
     """Build the per-block closure used by sub-volume patching: maps
     (B, d, h, w[, C]) cubes -> (B, d, h, w, classes). Backed by the shared
@@ -356,7 +394,8 @@ def make_infer(
     cubes in a CubeDivider share a static shape. ``volume_shape`` is the
     *cube* shape the closure will serve — "auto" judges slab divisibility
     and VMEM plans on it, not on the full-volume default."""
-    fn = jitted_apply(resolve(name, cfg, volume_shape))
+    fn = jitted_apply(resolve(name, cfg, volume_shape, precision),
+                      precision=precision)
 
     def infer(c: jax.Array) -> jax.Array:
         return fn(params, c, cfg)
@@ -364,8 +403,12 @@ def make_infer(
     return infer
 
 
-def _xla_apply(params, x, cfg):
-    return meshnet.apply(params, x, cfg)
+def _xla_apply(params, x, cfg, precision: str = "fp32"):
+    if precision == "fp32":
+        return meshnet.apply(params, x, cfg)
+    return quantize.reference_apply(
+        quantize.prepare_params(params, cfg, precision), x, cfg, precision
+    )
 
 
 register(

@@ -129,6 +129,7 @@ def subvolume_inference(
     cube: int = 64,
     overlap: int = MESHNET_RF_RADIUS,
     batch_cubes: int = 1,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Run per-cube inference over sub-cubes of ``vol`` and merge (failsafe).
 
@@ -150,9 +151,14 @@ def subvolume_inference(
         from repro.core import executors
 
         # resolve "auto" against the padded-cube geometry the closure will
-        # actually serve (slab divisibility, per-cube VMEM plans)
+        # actually serve (slab divisibility, per-cube VMEM plans); the
+        # precision policy rides the registry's jit cache, and zero-padded
+        # cube borders are exact at every policy (0 is exactly
+        # representable in bf16 and is int8 quantization's zero point)
         read = (cube + 2 * overlap,) * 3
-        infer_fn = executors.make_infer(executor, params, model_cfg, read)
+        infer_fn = executors.make_infer(
+            executor, params, model_cfg, read, precision=precision
+        )
     elif params is not None or model_cfg is not None or executor is not None:
         raise ValueError(
             "pass either infer_fn or params/model_cfg/executor, not both — "

@@ -14,9 +14,14 @@ sharding, core/spatial_shard.py; ``PipelineConfig.shard_devices`` pins
 the slab count for any executor). The default ``"auto"`` resolves per
 host: the sharded megakernel on multi-device TPU when the per-slab tile
 plan fits VMEM, the megakernel on one TPU device, else the fused kernel;
-XLA on CPU hosts. The executor that actually ran — and the modeled HBM
-and inter-device halo bytes its schedule moves for this volume
-(telemetry/traffic.py) — is recorded in the telemetry record.
+XLA on CPU hosts. ``PipelineConfig.precision`` picks the storage policy
+(kernels/quantize.py: fp32 | bf16 | int8w; "auto" -> bf16 on TPU, int8w
+for wide models, fp32 on CPU) — the conformed volume leaves
+preprocessing in the policy's storage dtype and every backend runs its
+precision-matched kernels. The executor and precision that actually ran
+— plus the modeled HBM, inter-device halo, and streamed-weight bytes
+their schedule moves for this volume (telemetry/traffic.py,
+quantize.model_params_bytes) — are recorded in the telemetry record.
 
 Each stage is timed into a telemetry record, mirroring Table IV's
 per-stage columns (Preprocessing / Cropping / Inference / Merging /
@@ -38,6 +43,7 @@ import jax.numpy as jnp
 from repro.core import components, conform as conform_mod, cropping, executors, patching
 from repro.core.meshnet import MeshNetConfig
 from repro.core.spatial_shard import ShardGeometryError
+from repro.kernels import quantize
 from repro.telemetry.record import StageTimes, TelemetryRecord
 from repro.telemetry.budget import MemoryBudget, BudgetExceeded
 
@@ -63,6 +69,13 @@ class PipelineConfig:
     # force single-device (unwraps a sharded default). Executors with no
     # sharded form (streaming) keep running single-device.
     shard_devices: Optional[int] = None
+    # storage policy (kernels/quantize.py): "fp32" | "bf16" | "int8w" |
+    # "auto" ("auto" -> bf16 on TPU, int8w for wide models, fp32 on CPU
+    # hosts where the XLA oracle serves). The conformed volume is cast /
+    # int8-quantized once at the end of preprocessing, so the inference
+    # schedule streams the policy's storage dtypes end to end; the
+    # resolved policy and the weight footprint are stamped on telemetry.
+    precision: str = quantize.AUTO
     cube: int = 64
     overlap: int = patching.MESHNET_RF_RADIUS
     batch_cubes: int = 1
@@ -113,7 +126,8 @@ def run(
         if cfg.mode == "subvolume"
         else cfg.volume_shape
     )
-    exec_name = executors.resolve(cfg.executor, cfg.model, work_shape)
+    precision = quantize.resolve_precision(cfg.precision, cfg.model)
+    exec_name = executors.resolve(cfg.executor, cfg.model, work_shape, precision)
     if cfg.shard_devices is not None:
         inner = executors.inner_of(exec_name)
         parsed = executors.parse_sharded(exec_name)
@@ -134,7 +148,13 @@ def run(
         # executors with no sharded form (streaming) keep running
         # single-device rather than failing the request.
     rec = TelemetryRecord(
-        model=cfg.name, mode=cfg.mode, status="ok", times=times, executor=exec_name
+        model=cfg.name,
+        mode=cfg.mode,
+        status="ok",
+        times=times,
+        executor=exec_name,
+        precision=precision,
+        params_bytes=quantize.model_params_bytes(cfg.model, precision),
     )
     try:
         # Pre-flight the sharded family's hard requirements: the host must
@@ -157,22 +177,24 @@ def run(
             )
             cube_shape = (cfg.cube + 2 * cfg.overlap,) * 3
             per_cube = executors.modeled_hbm_bytes(
-                exec_name, cfg.model, cube_shape
+                exec_name, cfg.model, cube_shape, precision=precision
             )
             rec.hbm_bytes_modeled = None if per_cube is None else ncubes * per_cube
             rec.collective_bytes_modeled = ncubes * executors.modeled_collective_bytes(
-                exec_name, cfg.model, cube_shape
+                exec_name, cfg.model, cube_shape, precision=precision
             )
         else:
             rec.hbm_bytes_modeled = executors.modeled_hbm_bytes(
-                exec_name, cfg.model, cfg.volume_shape
+                exec_name, cfg.model, cfg.volume_shape, precision=precision
             )
             rec.collective_bytes_modeled = executors.modeled_collective_bytes(
-                exec_name, cfg.model, cfg.volume_shape
+                exec_name, cfg.model, cfg.volume_shape, precision=precision
             )
         if cfg.use_cropping and mask_model is not None:
             # the mask forward runs under the same executor; probe it too
-            executors.modeled_hbm_bytes(exec_name, mask_model[1], cfg.volume_shape)
+            executors.modeled_hbm_bytes(
+                exec_name, mask_model[1], cfg.volume_shape, precision=precision
+            )
     except ValueError as e:
         # Unplannable schedule: the forward itself would raise the same
         # error, so keep the never-raises telemetry contract and report a
@@ -185,10 +207,20 @@ def run(
         return PipelineResult(segmentation=None, record=rec)
     budget = cfg.budget or MemoryBudget.unlimited()
 
+    act_bytes = quantize.act_bytes(precision)
     try:
-        # --- Stage 1: preprocessing (conform) -------------------------------
+        # --- Stage 1: preprocessing (conform + precision cast) --------------
         t0 = _now()
         x = conform_mod.conform(vol, cfg.volume_shape, voxel_size)
+        # The policy cast is conform's output write, not an inference
+        # cost: the conformed [0, 1] volume leaves preprocessing in the
+        # policy's storage dtype (int8-quantized under int8w — faithful
+        # to Brainchop, whose conformed volumes are uint8), so the
+        # inference schedule below streams it at that width.
+        if precision == "int8w":
+            x = quantize.quantize_input(x)
+        elif precision == "bf16":
+            x = x.astype(quantize.act_dtype(precision))
         x.block_until_ready()
         times.preprocessing = _now() - t0
 
@@ -198,8 +230,10 @@ def run(
         if cfg.use_cropping and mask_model is not None:
             t0 = _now()
             mparams, mcfg = mask_model
-            budget.charge_inference(x.shape, mcfg)
-            mask_logits = executors.jitted_apply(exec_name)(mparams, x[None], mcfg)
+            budget.charge_inference(x.shape, mcfg, dtype_bytes=act_bytes)
+            mask_logits = executors.jitted_apply(exec_name, precision=precision)(
+                mparams, x[None], mcfg
+            )
             mask = jnp.argmax(mask_logits[0], -1) > 0
             mask = components.largest_component(mask)
             size = cropping.pick_crop_size(mask, margin=cfg.crop_margin)
@@ -211,7 +245,9 @@ def run(
         # --- Stage 3: inference ----------------------------------------------
         t0 = _now()
         if cfg.mode == "subvolume":
-            budget.charge_subvolume(cfg.cube, cfg.overlap, cfg.model)
+            budget.charge_subvolume(
+                cfg.cube, cfg.overlap, cfg.model, dtype_bytes=act_bytes
+            )
             logits = patching.subvolume_inference(
                 x,
                 params=params,
@@ -220,6 +256,7 @@ def run(
                 cube=cfg.cube,
                 overlap=cfg.overlap,
                 batch_cubes=cfg.batch_cubes,
+                precision=precision,
             )
             logits.block_until_ready()
             # The trimmed write-back merge happens inside subvolume_inference
@@ -228,13 +265,17 @@ def run(
             times.inference = _now() - t0
             times.merging = 0.0
         elif cfg.mode == "streaming":
-            budget.charge_streaming(x.shape, cfg.model)
-            logits = executors.jitted_apply(exec_name, "streaming")(params, x[None], cfg.model)[0]
+            budget.charge_streaming(x.shape, cfg.model, dtype_bytes=act_bytes)
+            logits = executors.jitted_apply(exec_name, "streaming", precision)(
+                params, x[None], cfg.model
+            )[0]
             logits.block_until_ready()
             times.inference = _now() - t0
         else:  # full
-            budget.charge_inference(x.shape, cfg.model)
-            logits = executors.jitted_apply(exec_name)(params, x[None], cfg.model)[0]
+            budget.charge_inference(x.shape, cfg.model, dtype_bytes=act_bytes)
+            logits = executors.jitted_apply(exec_name, precision=precision)(
+                params, x[None], cfg.model
+            )[0]
             logits.block_until_ready()
             times.inference = _now() - t0
 

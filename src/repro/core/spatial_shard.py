@@ -53,7 +53,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import meshnet
 from repro.core.meshnet import MeshNetConfig
-from repro.kernels import ops
+from repro.kernels import ops, quantize
 
 # jax.shard_map landed after 0.4.x; fall back to the experimental home.
 try:  # pragma: no cover - version-dependent
@@ -141,68 +141,136 @@ def halo_exchange_z(x: jax.Array, halo: int, axis_name: str) -> jax.Array:
     return jnp.concatenate(left + [x] + right, axis=1)
 
 
-def _conv_layer_slab(layer, x, dilation: int, cfg: MeshNetConfig, axis_name: str):
-    """One MeshNet block on a Z-slab: halo exchange + valid-Z conv."""
+def _conv_layer_slab(
+    layer, x, dilation: int, cfg: MeshNetConfig, axis_name: str,
+    precision: str = "fp32",
+):
+    """One MeshNet block on a Z-slab: halo exchange + valid-Z conv. At
+    reduced precision the exchanged halos ship in the activation storage
+    dtype (bf16), the conv accumulates fp32 on the (possibly int8) taps,
+    and the dequant/BN epilogue runs fp32 — the same rounding points as
+    the single-device backends, so slab parity holds per policy."""
     x = halo_exchange_z(x, dilation, axis_name)
     pad = dilation  # 'same' padding in H, W; Z context comes from the halo
-    out = jax.lax.conv_general_dilated(
-        x,
-        layer["w"],
-        (1, 1, 1),
-        [(0, 0), (pad, pad), (pad, pad)],
-        rhs_dilation=(dilation,) * 3,
-        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
-    ) + layer["b"]
-    if cfg.use_batchnorm:
-        out = (out - layer["bn_mean"]) * jax.lax.rsqrt(layer["bn_var"] + 1e-5)
-        out = out * layer["bn_scale"] + layer["bn_bias"]
-    return jax.nn.relu(out)
+    if precision == "fp32":
+        out = jax.lax.conv_general_dilated(
+            x,
+            layer["w"],
+            (1, 1, 1),
+            [(0, 0), (pad, pad), (pad, pad)],
+            rhs_dilation=(dilation,) * 3,
+            dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+        ) + layer["b"]
+        if cfg.use_batchnorm:
+            out = (out - layer["bn_mean"]) * jax.lax.rsqrt(layer["bn_var"] + 1e-5)
+            out = out * layer["bn_scale"] + layer["bn_bias"]
+        return jax.nn.relu(out)
+    # the one shared reduced-precision block (z_same=False: Z context
+    # came from the halo exchange above) — same rounding points as the
+    # xla oracle and the streaming first layer, by construction
+    return quantize.conv_block_reduced(
+        x, layer, dilation, cfg.use_batchnorm,
+        quantize.act_dtype(precision), z_same=False,
+    )
 
 
-def _head(params, x: jax.Array) -> jax.Array:
+def _head(params, x: jax.Array, precision: str = "fp32") -> jax.Array:
     head = params["head"]
-    return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+    if precision == "fp32":
+        return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+    adt = quantize.act_dtype(precision)
+    logits = (
+        jnp.einsum(
+            "bdhwi,io->bdhwo",
+            x,
+            head["w"][0, 0, 0].astype(adt),
+            preferred_element_type=jnp.float32,
+        )
+        + head["b"].astype(jnp.float32)
+    )
+    return logits.astype(adt)
 
 
-def _slab_xla(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+def _dequant_slab_input(x, precision: str):
+    """Bring a slab into the policy's activation dtype before the layer-
+    wise schedules: pre-quantized int8 input dequants by the fixed
+    conformed-volume scale; float input is (for int8w) first snapped to
+    the same int8 grid so slab parity with the single-device backends is
+    exact rather than approximate."""
+    if precision == "fp32":
+        return x
+    adt = quantize.act_dtype(precision)
+    if precision == "int8w":
+        if x.dtype != jnp.int8:
+            x = quantize.quantize_input(x)
+        return x.astype(adt) * jnp.asarray(quantize.INPUT_SCALE, adt)
+    return x.astype(adt)
+
+
+def _slab_xla(
+    params, x, cfg: MeshNetConfig, axis_name: str, precision: str = "fp32"
+) -> jax.Array:
     """Layer-wise schedule, XLA inner: exchange d, valid-Z conv, repeat."""
+    x = _dequant_slab_input(x, precision)
     for i, d in enumerate(cfg.dilations):
-        x = _conv_layer_slab(params["layers"][i], x, d, cfg, axis_name)
-    return _head(params, x)
+        x = _conv_layer_slab(params["layers"][i], x, d, cfg, axis_name, precision)
+    return _head(params, x, precision)
 
 
-def _slab_fused(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+def _slab_fused(
+    params, x, cfg: MeshNetConfig, axis_name: str, precision: str = "fp32"
+) -> jax.Array:
     """Layer-wise schedule, fused Pallas inner: exchange d, run the fused
     conv+BN+ReLU kernel 'same' on the extended slab, crop the polluted
     d-band back off. 'Same' output at positions >= d from the extended
     edge only taps in-window data, so the crop is exact; pod edges hold
-    zero halos == the volume's per-layer zero padding."""
+    zero halos == the volume's per-layer zero padding. Reduced precisions
+    exchange bf16 halos and stream bf16/int8 weights into the kernel,
+    whose dequant epilogue is the same as the unsharded fused path."""
+    x = _dequant_slab_input(x, precision)
+    # params arrive already prepared: sharded_executor_apply quantizes
+    # once outside shard_map so the prep is not replicated per device
+    use_quant = precision != "fp32"
     for i, d in enumerate(cfg.dilations):
         layer = params["layers"][i]
-        if cfg.use_batchnorm:
+        if use_quant:
+            bias, scale, offset = quantize.fold_epilogue(layer, cfg.use_batchnorm)
+        elif cfg.use_batchnorm:
+            bias = layer["b"]
             scale, offset = ops.fold_batchnorm(layer)
         else:
+            bias = layer["b"]
             scale = offset = None
         xe = halo_exchange_z(x, d, axis_name)
         out = ops.dilated_conv3d(
-            xe, layer["w"], layer["b"],
+            xe, layer["w"], bias,
             dilation=d, scale=scale, offset=offset, fuse_affine=True,
         )
         x = out[:, d:-d]
-    return _head(params, x)
+    return _head(params, x, precision)
 
 
-def _slab_megakernel(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array:
+def _slab_megakernel(
+    params, x, cfg: MeshNetConfig, axis_name: str, precision: str = "fp32"
+) -> jax.Array:
     """One-shot schedule, megakernel inner: a single multi-hop exchange of
     the full RF radius feeds the depth-first megakernel, whose tile plan is
     computed on the slab+halo window. Dynamic Z mask bounds tell the kernel
     where the *true* volume ends inside the window, so per-layer 'same'
     zero padding is reproduced at pod edges (bit-exact boundary), while
     interior window edges only pollute the halo band the final crop drops.
+    For int8w the exchange ships the *quantized* slab (int8 halos — the
+    cheapest collectives of the family) and the kernel dequants in VMEM.
     """
     n = _axis_size(axis_name)
     dloc = x.shape[1]
     radius = sum(cfg.dilations)
+    if precision == "int8w" and x.dtype != jnp.int8:
+        # quantize before exchanging: pointwise, so quantize-then-exchange
+        # equals exchange-then-quantize, and the halo bytes quarter
+        x = quantize.quantize_input(x)
+    elif precision == "bf16":
+        x = x.astype(quantize.act_dtype(precision))
     xe = halo_exchange_z(x, radius, axis_name)
     g = jax.lax.axis_index(axis_name) * dloc  # my slab's global Z start
     # local coord z holds global z = g - radius + z; valid global range
@@ -210,7 +278,9 @@ def _slab_megakernel(params, x, cfg: MeshNetConfig, axis_name: str) -> jax.Array
     z_bounds = jnp.stack(
         [radius - g, radius - g + n * dloc]
     ).astype(jnp.int32)
-    out = ops.meshnet_apply_megakernel(params, xe, cfg, z_bounds=z_bounds)
+    out = ops.meshnet_apply_megakernel(
+        params, xe, cfg, z_bounds=z_bounds, precision=precision
+    )
     return out[:, radius : radius + dloc]
 
 
@@ -232,13 +302,17 @@ def sharded_executor_apply(
     *,
     num_devices: int | None = None,
     axis: str = SPATIAL_AXIS,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Z-sharded MeshNet forward through the named inner backend.
 
     x: (B, D, H, W) or (B, D, H, W, C); D must divide by the slab count.
     The registry's ``sharded_<inner>`` specs (core/executors.py) are thin
     closures over this function; parity with the single-device inner is
-    the sharded family's contract (tests/test_sharded_executor.py).
+    the sharded family's contract (tests/test_sharded_executor.py),
+    per precision policy: the layer-wise inners exchange bf16 halos, the
+    megakernel inner's one-shot RF fetch ships the int8 input under
+    "int8w" (tests/test_precision.py).
     """
     if inner not in _SLAB_FNS:
         raise KeyError(
@@ -255,9 +329,13 @@ def sharded_executor_apply(
     mesh = mesh_for(n, axis)
     in_spec = P(None, axis, None, None, None)
     slab_fn = _SLAB_FNS[inner]
+    if precision != "fp32":
+        # prepare once, outside shard_map, so every slab streams the same
+        # quantized weights (and the prep is not replicated per device)
+        params = quantize.prepare_params(params, cfg, precision)
 
     fn = _shard_map(
-        lambda p, xs: slab_fn(p, xs, cfg, axis),
+        lambda p, xs: slab_fn(p, xs, cfg, axis, precision),
         mesh=mesh,
         in_specs=(P(), in_spec),
         out_specs=in_spec,

@@ -193,7 +193,8 @@ def dilated_conv3d(
     Cout = w.shape[-1]
     assert D % block == H % block == W % block == 0, (x.shape, block)
     check_vmem(block, Cin, Cout, dilation=dilation,
-               dtype_bytes=x.dtype.itemsize, variant=variant)
+               dtype_bytes=x.dtype.itemsize, variant=variant,
+               weight_bytes=w.dtype.itemsize)
 
     grid = (B, D // block, H // block, W // block)
 
@@ -268,6 +269,7 @@ def vmem_bytes(
     dilation: int = 16,
     dtype_bytes: int = 4,
     variant: str = "halo",
+    weight_bytes: int | None = None,
 ) -> int:
     """Exact VMEM working set of one grid step, bytes.
 
@@ -275,10 +277,14 @@ def vmem_bytes(
     block + weights. ``views``: the 27 streamed views *plus* the assembled
     (3*block)^3 neighbourhood buffer the original estimate omitted (it
     undercounted the working set ~2x), + accumulator + output + weights.
+    ``dtype_bytes``/``weight_bytes`` come from the actual array dtypes
+    (the precision policy, kernels/quantize.py): bf16 activations halve
+    the window, int8 weights quarter the tap block — ``weight_bytes``
+    defaults to ``dtype_bytes`` for the uniform legacy case.
     """
     acc = block**3 * cout * 4  # f32 accumulator
     out = block**3 * cout * dtype_bytes
-    wgt = 27 * cin * cout * dtype_bytes
+    wgt = 27 * cin * cout * (weight_bytes or dtype_bytes)
     if variant == "halo":
         inp = (block + 2 * dilation) ** 3 * cin * dtype_bytes
     else:
@@ -295,12 +301,14 @@ def suggest_block(
     dtype_bytes: int = 4,
     variant: str = "halo",
     budget: int = VMEM_BUDGET,
+    weight_bytes: int | None = None,
 ) -> int | None:
     """Largest block (multiple of 8, >= dilation) whose working set fits."""
     for cand in (64, 56, 48, 40, 32, 24, 16, 8):
         if cand < dilation:
             break
-        if vmem_bytes(cand, cin, cout, dilation, dtype_bytes, variant) <= budget:
+        if vmem_bytes(cand, cin, cout, dilation, dtype_bytes, variant,
+                      weight_bytes) <= budget:
             return cand
     return None
 
@@ -313,12 +321,15 @@ def check_vmem(
     dtype_bytes: int = 4,
     variant: str = "halo",
     budget: int = VMEM_BUDGET,
+    weight_bytes: int | None = None,
 ) -> int:
     """Raise (with a suggested smaller block) before a pallas_call that
     would exceed the ~16 MB VMEM budget; returns the priced working set."""
-    need = vmem_bytes(block, cin, cout, dilation, dtype_bytes, variant)
+    need = vmem_bytes(block, cin, cout, dilation, dtype_bytes, variant,
+                      weight_bytes)
     if need > budget:
-        hint = suggest_block(cin, cout, dilation, dtype_bytes, variant, budget)
+        hint = suggest_block(cin, cout, dilation, dtype_bytes, variant,
+                             budget, weight_bytes)
         fix = f"try block={hint}" if hint else "no block fits; shard channels"
         raise ValueError(
             f"dilated_conv3d[{variant}] block={block} cin={cin} cout={cout} "

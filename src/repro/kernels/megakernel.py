@@ -49,22 +49,58 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import quantize
 
 #: Default planning budget: 16 MiB VMEM per core minus Mosaic headroom.
 VMEM_BUDGET = 14 * 1024 * 1024
 
-#: Per-axis tile-size candidates (sublane-friendly multiples of 8).
-TILE_CANDIDATES = (8, 16, 24, 32, 48, 64, 96, 128, 256)
+#: Per-axis tile-size candidates (sublane-friendly multiples of 8). The
+#: intermediate sizes (40, 56, 80, 160, 192) exist for the reduced-
+#: precision working sets: a bf16/int8 tile often fits at e.g. 40 where
+#: 48 busts the budget and 32 wastes halo — the fp32 plans are unchanged
+#: by the finer grid (tests/test_precision.py pins the paper-volume fp32
+#: bytes).
+TILE_CANDIDATES = (8, 16, 24, 32, 40, 48, 56, 64, 80, 96, 128, 160, 192, 256)
 
 
 def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+#: per-role HBM/VMEM byte widths of one plan: (activation/compute,
+#: weights, input volume, inter-segment staging). ``None`` anywhere a
+#: legacy uniform ``dtype_bytes`` is meant.
+Widths = tuple[int, int, int, int]
+
+
+def plan_widths(
+    precision: Optional[str],
+    dtype_bytes: int = 4,
+    int8_staging: Optional[bool] = None,
+) -> Widths:
+    """The (act, weight, input, staging) byte widths a plan prices.
+
+    ``precision=None`` reproduces the legacy uniform-``dtype_bytes``
+    model exactly (what fp32 also does at dtype_bytes=4). int8w stages
+    int8 only when activation bounds exist (``int8_staging`` — BatchNorm
+    statistics or a calibration pass, kernels/quantize.py); without them
+    staging stays at the bf16 compute width.
+    """
+    if precision is None:
+        return (dtype_bytes,) * 4
+    act = quantize.act_bytes(precision)
+    stg = quantize.staging_bytes(precision)
+    if precision == "int8w" and int8_staging is False:
+        stg = act
+    return (act, quantize.weight_bytes(precision), quantize.input_bytes(precision), stg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,59 +133,88 @@ class Segment:
         return sizes
 
 
-def _segment_vmem_bytes(seg: Segment, dtype_bytes: int = 4) -> int:
+def _segment_vmem_bytes(
+    seg: Segment, dtype_bytes: int = 4, widths: Optional[Widths] = None
+) -> int:
     """VMEM working set of one grid step: the statically allocated scratch
     (DMA'd input buffer + ping/pong activation buffers + logits staging
     when the head is fused + weights) **plus** the transient f32
     accumulator of the widest layer — scratch lives for the whole kernel,
     and the tap loop's ``acc`` is live alongside it, so omitting it would
     admit plans that exceed real VMEM (the tap reads themselves stream
-    from the resident buffers and need no second copy)."""
+    from the resident buffers and need no second copy). With per-role
+    ``widths`` the DMA'd buffer is priced at the input/staging width, the
+    compute buffers at the activation width, and int8-staging segments
+    additionally hold the quantized output tile they DMA out.
+    """
+    act, wt, inp, stg = widths or (dtype_bytes,) * 4
+    ib = inp if seg.start == 0 else stg
     sizes = seg.buffer_sizes()
-    buf_in = math.prod(sizes[0]) * seg.cin * dtype_bytes
-    ping = max(math.prod(s) for s in sizes[1::2]) * seg.channels * dtype_bytes
+    buf_in = math.prod(sizes[0]) * seg.cin * ib
+    ping = max(math.prod(s) for s in sizes[1::2]) * seg.channels * act
     pong = (
-        max(math.prod(s) for s in sizes[2::2]) * seg.channels * dtype_bytes
+        max(math.prod(s) for s in sizes[2::2]) * seg.channels * act
         if len(sizes) > 2
         else 0
     )
-    wgt = 27 * seg.cin * seg.channels * dtype_bytes
-    wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
+    wgt = 27 * seg.cin * seg.channels * wt
+    wgt += 27 * seg.channels**2 * wt * (len(seg.dilations) - 1)
     logits = (
-        math.prod(seg.tile) * seg.num_classes * dtype_bytes if seg.fuse_head else 0
+        math.prod(seg.tile) * seg.num_classes * act if seg.fuse_head else 0
+    )
+    qout = (
+        math.prod(seg.tile) * seg.channels * stg
+        if (not seg.fuse_head and stg < act)
+        else 0
     )
     acc = max(math.prod(s) for s in sizes[1:]) * seg.channels * 4  # f32
     if seg.fuse_head:
         acc = max(acc, math.prod(seg.tile) * seg.num_classes * 4)
-    return buf_in + ping + pong + wgt + logits + acc
+    return buf_in + ping + pong + wgt + logits + qout + acc
 
 
 def _segment_hbm_bytes(
-    seg: Segment, padded: tuple[int, int, int], dtype_bytes: int
+    seg: Segment,
+    padded: tuple[int, int, int],
+    dtype_bytes: int,
+    widths: Optional[Widths] = None,
 ) -> int:
     """Modeled HBM bytes of one segment: haloed tile reads, per-grid-step
     weight streams, and the central-region write. The ONE formula shared
     by ``MegakernelPlan.hbm_bytes`` (what telemetry/benchmarks report) and
     the planner's DP objective — so the plan the DP picks is the minimum
-    of the model it reports."""
+    of the model it reports. ``widths`` prices each tensor role at its
+    policy byte width: window reads at the input width for the first
+    segment and the staging width after, weight streams at the weight
+    width, the write at the staging width (activation width for the
+    fused-head logits)."""
+    act, wt, inp, stg = widths or (dtype_bytes,) * 4
+    ib = inp if seg.start == 0 else stg
+    ob = act if seg.fuse_head else stg
     ntiles = math.prod(pp // t for pp, t in zip(padded, seg.tile))
     window = math.prod(t + 2 * seg.halo for t in seg.tile)
-    wgt = 27 * seg.cin * seg.channels * dtype_bytes
-    wgt += 27 * seg.channels**2 * dtype_bytes * (len(seg.dilations) - 1)
+    wgt = 27 * seg.cin * seg.channels * wt
+    wgt += 27 * seg.channels**2 * wt * (len(seg.dilations) - 1)
     if seg.fuse_head:
-        wgt += seg.channels * seg.num_classes * dtype_bytes
-    total = ntiles * (window * seg.cin * dtype_bytes + wgt)
-    total += math.prod(padded) * seg.cout * dtype_bytes
+        wgt += seg.channels * seg.num_classes * wt
+    total = ntiles * (window * seg.cin * ib + wgt)
+    total += math.prod(padded) * seg.cout * ob
     return total
 
 
 @dataclasses.dataclass(frozen=True)
 class MegakernelPlan:
-    """Static execution plan: segments + geometry for one (cfg, volume)."""
+    """Static execution plan: segments + geometry for one (cfg, volume).
+
+    ``widths`` carries the precision policy's per-role byte widths the
+    plan was optimized for (None = the legacy uniform-``dtype_bytes``
+    fp32 model); ``hbm_bytes`` prices with them, so the planner's DP
+    objective and the reported model stay one formula per precision."""
 
     segments: tuple[Segment, ...]
     vol: tuple[int, int, int]  # true volume dims (pre-padding)
     vmem_budget: int
+    widths: Optional[Widths] = None
 
     def padded(self, seg: Segment) -> tuple[int, int, int]:
         """Tile-multiple dims of the region this segment computes."""
@@ -171,15 +236,20 @@ class MegakernelPlan:
         """Modeled HBM traffic of one forward: the input pad round-trip,
         then per segment the haloed tile reads, the weight streams, and the
         central-region writes (staging halo borders are allocated but never
-        written, so they cost nothing)."""
+        written, so they cost nothing). A plan optimized for a precision
+        policy prices with its own per-role widths (``dtype_bytes`` is the
+        legacy uniform knob and is ignored when ``widths`` is set)."""
+        widths = self.widths or (dtype_bytes,) * 4
+        inp = widths[2]
         total = 0
         first = self.segments[0]
         p0 = self.padded(first)
-        # host-side zero-pad of the raw input (read + padded write)
-        total += math.prod(self.vol) * first.cin * dtype_bytes
-        total += math.prod(t + 2 * first.halo for t in p0) * first.cin * dtype_bytes
+        # host-side zero-pad of the input volume (read + padded write, at
+        # the policy's input storage width)
+        total += math.prod(self.vol) * first.cin * inp
+        total += math.prod(t + 2 * first.halo for t in p0) * first.cin * inp
         for seg in self.segments:
-            total += _segment_hbm_bytes(seg, self.padded(seg), dtype_bytes)
+            total += _segment_hbm_bytes(seg, self.padded(seg), dtype_bytes, widths)
         return batch * total
 
 
@@ -192,16 +262,24 @@ def plan(
     *,
     vmem_budget: int = VMEM_BUDGET,
     dtype_bytes: int = 4,
+    precision: Optional[str] = None,
+    int8_staging: Optional[bool] = None,
 ) -> MegakernelPlan:
     """Choose segment boundaries and per-axis tiles by DP over modeled
     HBM traffic, subject to each segment's working set fitting VMEM.
 
+    ``precision`` prices every tensor role at its policy width
+    (``plan_widths``), which is where the second-order traffic win comes
+    from: a bf16/int8 working set is 2-4x smaller, so the DP affords
+    larger tiles and fewer halo re-fetches on top of the per-byte cut.
+    ``precision=None`` keeps the legacy uniform-``dtype_bytes`` model
+    (byte-identical fp32 plans).
+
     Raises with an actionable message when even a single layer at the
     smallest tile exceeds the budget (channel width is the only lever
-    left at that point). Memoized: the DP costs ~0.4 s in Python at the
-    paper volume, and the serving path replans the same (model, volume)
-    on every request ("auto" resolution, traffic telemetry, the forward
-    itself).
+    left at that point). Memoized: the serving path replans the same
+    (model, volume, precision) on every request ("auto" resolution,
+    traffic telemetry, the forward itself).
     """
     return _plan_cached(
         tuple(int(d) for d in dilations),
@@ -210,7 +288,7 @@ def plan(
         int(num_classes),
         tuple(int(v) for v in vol),
         int(vmem_budget),
-        int(dtype_bytes),
+        plan_widths(precision, dtype_bytes, int8_staging),
     )
 
 
@@ -222,15 +300,17 @@ def _plan_cached(
     num_classes: int,
     vol: tuple[int, int, int],
     vmem_budget: int,
-    dtype_bytes: int,
+    widths: Widths,
 ) -> MegakernelPlan:
     n = len(dils)
+    act, wt, inp, stg = widths
     # Oversize tiles only waste padding: cap candidates near the volume.
     cands = [
-        [t for t in TILE_CANDIDATES if t <= _ceil_to(v, 8)] or [8] for v in vol
-    ]
-    tiles = [
-        (tz, ty, tx) for tz in cands[0] for ty in cands[1] for tx in cands[2]
+        np.array(
+            [t for t in TILE_CANDIDATES if t <= _ceil_to(v, 8)] or [8],
+            dtype=np.float64,
+        )
+        for v in vol
     ]
 
     def seg_for(i: int, j: int, tile) -> Segment:
@@ -244,34 +324,86 @@ def _plan_cached(
             num_classes=num_classes,
         )
 
-    def traffic(seg: Segment, plan_: MegakernelPlan) -> int:
-        p = plan_.padded(seg)
-        pad = 0
-        if seg.start == 0:
-            pad = math.prod(vol) * seg.cin * dtype_bytes
-            pad += math.prod(t + 2 * seg.halo for t in p) * seg.cin * dtype_bytes
-        return pad + _segment_hbm_bytes(seg, p, dtype_bytes)
-
-    probe = MegakernelPlan(segments=(), vol=vol, vmem_budget=vmem_budget)
+    # Vectorized DP: for each (i, j) the per-axis buffer sizes are affine
+    # in the tile candidate, so every per-tile quantity (VMEM working set,
+    # modeled segment traffic) is evaluated over the whole candidate grid
+    # with numpy broadcasting — the plan is exact, only ~100x faster than
+    # constructing a Segment per (i, j, tile). All intermediates are
+    # integer-valued float64 (< 2**53), so comparisons are exact; the
+    # chosen plan's bytes are re-derived in int arithmetic by hbm_bytes.
     INF = float("inf")
     best: list[float] = [INF] * (n + 1)
     best[n] = 0.0
     choice: list[tuple[int, tuple[int, int, int]] | None] = [None] * (n + 1)
+    grids = np.meshgrid(*cands, indexing="ij")  # (A,B,C) per axis
+    vol_np = [float(v) for v in vol]
     for i in range(n - 1, -1, -1):
+        cin = in_channels if i == 0 else channels
+        ib = inp if i == 0 else stg
         for j in range(i + 1, n + 1):
-            for tile in tiles:
-                seg = seg_for(i, j, tile)
-                if _segment_vmem_bytes(seg, dtype_bytes) > vmem_budget:
-                    continue
-                cost = traffic(seg, probe) + best[j]
-                if cost < best[i]:
-                    best[i] = cost
-                    choice[i] = (j, tile)
+            d_ij = dils[i:j]
+            h = sum(d_ij)
+            k = j - i
+            fuse_head = j == n
+            cout = num_classes if fuse_head else channels
+            ob = act if fuse_head else stg
+            # per-layer valid-region products P_l over the tile grid
+            cum = 0
+            prods = []
+            for l in range(k + 1):
+                s = 2 * (h - cum)
+                prods.append(
+                    (grids[0] + s) * (grids[1] + s) * (grids[2] + s)
+                )
+                if l < k:
+                    cum += d_ij[l]
+            wgt = 27 * cin * channels * wt + 27 * channels**2 * wt * (k - 1)
+            wgt_h = wgt + (channels * num_classes * wt if fuse_head else 0)
+            buf_in = prods[0] * (cin * ib)
+            ping = np.maximum.reduce(prods[1::2]) * (channels * act)
+            pong = (
+                np.maximum.reduce(prods[2::2]) * (channels * act)
+                if k >= 2
+                else 0.0
+            )
+            acc = np.maximum.reduce(prods[1:]) * (channels * 4)
+            tilep = prods[k]  # sizes[-1] == tile exactly
+            logits = tilep * (num_classes * act) if fuse_head else 0.0
+            if fuse_head:
+                acc = np.maximum(acc, tilep * (num_classes * 4))
+            qout = (
+                tilep * (channels * stg)
+                if (not fuse_head and stg < act)
+                else 0.0
+            )
+            vmem = buf_in + ping + pong + wgt + logits + qout + acc
+            padded = [np.ceil(v / g) * g for v, g in zip(vol_np, grids)]
+            ntiles = (
+                (padded[0] / grids[0]) * (padded[1] / grids[1]) * (padded[2] / grids[2])
+            )
+            cost = ntiles * (prods[0] * (cin * ib) + wgt_h)
+            cost += padded[0] * padded[1] * padded[2] * (cout * ob)
+            if i == 0:
+                cost += math.prod(vol) * (cin * inp)
+                cost += (
+                    (padded[0] + 2 * h) * (padded[1] + 2 * h) * (padded[2] + 2 * h)
+                ) * (cin * inp)
+            cost = np.where(vmem <= vmem_budget, cost, INF)
+            flat = int(np.argmin(cost))
+            c = float(cost.reshape(-1)[flat]) + best[j]
+            if c < best[i]:
+                best[i] = c
+                idx = np.unravel_index(flat, cost.shape)
+                choice[i] = (
+                    j,
+                    tuple(int(cands[ax][idx[ax]]) for ax in range(3)),
+                )
     if best[0] == INF:
         one = seg_for(0, 1, (8, 8, 8))
+        need = _segment_vmem_bytes(one, widths=widths)
         raise ValueError(
             f"megakernel plan infeasible: one layer at tile (8,8,8) needs "
-            f"{_segment_vmem_bytes(one, dtype_bytes) / 2**20:.1f} MiB of VMEM, "
+            f"{need / 2**20:.1f} MiB of VMEM, "
             f"over the {vmem_budget / 2**20:.0f} MiB budget — reduce channel "
             f"width ({channels}) or raise vmem_budget"
         )
@@ -281,13 +413,28 @@ def _plan_cached(
         j, tile = choice[i]  # type: ignore[misc]
         segments.append(seg_for(i, j, tile))
         i = j
-    return MegakernelPlan(segments=tuple(segments), vol=vol, vmem_budget=vmem_budget)
+    return MegakernelPlan(
+        segments=tuple(segments),
+        vol=vol,
+        vmem_budget=vmem_budget,
+        widths=None if widths == (4, 4, 4, 4) else widths,
+    )
 
 
 def plan_for_config(
-    cfg, vol: tuple[int, int, int], *, vmem_budget: int = VMEM_BUDGET, dtype_bytes: int = 4
+    cfg,
+    vol: tuple[int, int, int],
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+    dtype_bytes: int = 4,
+    precision: Optional[str] = None,
+    int8_staging: Optional[bool] = None,
 ) -> MegakernelPlan:
-    """``plan`` from a MeshNetConfig-shaped object."""
+    """``plan`` from a MeshNetConfig-shaped object. With a ``precision``,
+    int8 staging defaults to whether the config has BatchNorm statistics
+    to bound the staging scales with (kernels/quantize.py)."""
+    if precision is not None and int8_staging is None:
+        int8_staging = bool(cfg.use_batchnorm)
     return plan(
         cfg.dilations,
         cfg.in_channels,
@@ -296,6 +443,8 @@ def plan_for_config(
         vol,
         vmem_budget=vmem_budget,
         dtype_bytes=dtype_bytes,
+        precision=precision,
+        int8_staging=int8_staging,
     )
 
 
@@ -306,6 +455,8 @@ def _segment_kernel(
     out_halo: int,
     use_affine: bool,
     has_z_bounds: bool = False,
+    deq_in: bool = False,
+    quant_out: bool = False,
 ):
     """Kernel body: DMA the haloed input window, run ``seg``'s layers
     back-to-back in VMEM (masking out-of-volume positions after every
@@ -317,11 +468,21 @@ def _segment_kernel(
     (core/spatial_shard.py) uses it to place the *true* volume boundary
     inside a slab+halo window, so pod-edge slabs re-zero their
     out-of-volume halo per layer exactly like full-volume 'same' padding.
+
+    int8w staging (kernels/quantize.py): ``deq_in`` adds a per-channel
+    fp32 vector that dequantizes the DMA'd int8 staging window on the fly
+    in VMEM (applied per tap slice of the segment's first layer — the
+    only layer that reads the buffer); ``quant_out`` adds the symmetric
+    per-channel scale the segment's last-layer output is quantized with
+    before the output DMA, so what crosses HBM between segments is int8.
+    Per-output-channel int8 *weights* need neither: their dequant scale
+    is already folded into the affine epilogue (quantize.fold_epilogue).
     """
     k = len(seg.dilations)
     per_layer = 4 if use_affine else 2
     n_head = 2 if seg.fuse_head else 0
-    n_in = 1 + k * per_layer + n_head + (1 if has_z_bounds else 0)
+    n_extra = int(deq_in) + int(quant_out) + int(has_z_bounds)
+    n_in = 1 + k * per_layer + n_head + n_extra
     x_ref = refs[0]
     layer_refs = [
         refs[1 + i * per_layer : 1 + (i + 1) * per_layer] for i in range(k)
@@ -331,7 +492,12 @@ def _segment_kernel(
         if seg.fuse_head
         else None
     )
-    zb_ref = refs[n_in - 1] if has_z_bounds else None
+    pos = 1 + k * per_layer + n_head
+    deq_ref = refs[pos] if deq_in else None
+    pos += int(deq_in)
+    qscale_ref = refs[pos] if quant_out else None
+    pos += int(quant_out)
+    zb_ref = refs[pos] if has_z_bounds else None
     out_ref = refs[n_in]
     scratch = refs[n_in + 1 :]
     buf_in, ping = scratch[0], scratch[1]
@@ -340,6 +506,8 @@ def _segment_kernel(
     idx += 1 if k >= 2 else 0
     logits_buf = scratch[idx] if seg.fuse_head else None
     idx += 1 if seg.fuse_head else 0
+    qout_buf = scratch[idx] if quant_out else None
+    idx += 1 if quant_out else 0
     sem = scratch[idx]
 
     bi, zi, yi, xi = (pl.program_id(i) for i in range(4))
@@ -396,10 +564,15 @@ def _segment_kernel(
                         d + ty * d : d + ty * d + size[1],
                         d + tx * d : d + tx * d + size[2],
                         :,
-                    ]
+                    ].astype(jnp.float32)
+                    if li == 0 and deq_ref is not None:
+                        # dequant the int8 staging window on the fly: the
+                        # per-channel scale of the previous segment's
+                        # quantized output (only layer 0 reads buf_in).
+                        sl = sl * deq_ref[...]
                     acc = acc + jnp.einsum(
                         "zyxi,io->zyxo",
-                        sl.astype(jnp.float32),
+                        sl,
                         w[tz + 1, ty + 1, tx + 1].astype(jnp.float32),
                         preferred_element_type=jnp.float32,
                     )
@@ -412,9 +585,20 @@ def _segment_kernel(
         out = jnp.maximum(out, 0.0)
         if li + 1 < k:
             out = mask(out, size, h - cum)
-        dst = ping if li % 2 == 0 else pong
-        dst[0 : size[0], 0 : size[1], 0 : size[2], :] = out.astype(dst.dtype)
-        prev, prev_size = dst, size
+            dst = ping if li % 2 == 0 else pong
+            dst[0 : size[0], 0 : size[1], 0 : size[2], :] = out.astype(dst.dtype)
+            prev, prev_size = dst, size
+        elif quant_out:
+            # last layer of an int8-staging segment: quantize the (exactly
+            # tile-sized) output in VMEM so int8 is what crosses HBM.
+            qout_buf[...] = jnp.clip(
+                jnp.round(out / qscale_ref[...]), -127, 127
+            ).astype(jnp.int8)
+            prev, prev_size = qout_buf, size
+        else:
+            dst = ping if li % 2 == 0 else pong
+            dst[0 : size[0], 0 : size[1], 0 : size[2], :] = out.astype(dst.dtype)
+            prev, prev_size = dst, size
 
     if seg.fuse_head:
         hw_ref, hb_ref = head_refs
@@ -459,13 +643,26 @@ def _run_segment(
     fold_affine,
     interpret: bool,
     z_bounds: jax.Array | None = None,
+    layer_epilogue=None,
+    compute_dtype=None,
+    staging_scales: Sequence[jax.Array] | None = None,
 ) -> jax.Array:
+    """Run one plan segment. The legacy fp32 path passes ``fold_affine``;
+    the precision paths pass ``layer_epilogue(layer, global_index) ->
+    (bias, scale, offset)`` (quantize.fold_epilogue with the input scale
+    folded into layer 0) plus ``compute_dtype`` (the ping/pong and logits
+    width) and, for int8 staging, the per-layer ``staging_scales`` that
+    pick this segment's boundary dequant/quant vectors."""
     B = act.shape[0]
     padded = pln.padded(seg)
     out_dims = pln.out_dims(i)
     out_halo = (
         pln.segments[i + 1].halo if i + 1 < len(pln.segments) else 0
     )
+    cdt = act.dtype if compute_dtype is None else compute_dtype
+    int8_stage = staging_scales is not None
+    deq_in = int8_stage and seg.start > 0
+    quant_out = int8_stage and not seg.fuse_head
 
     args = [act]
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
@@ -477,14 +674,25 @@ def _run_segment(
     for li in range(len(seg.dilations)):
         layer = params["layers"][seg.start + li]
         add_full(layer["w"])
-        add_full(layer["b"])
-        if use_affine:
-            scale, offset = fold_affine(layer)
+        if layer_epilogue is not None:
+            bias, scale, offset = layer_epilogue(layer, seg.start + li)
+            add_full(bias)
             add_full(scale)
             add_full(offset)
+        else:
+            add_full(layer["b"])
+            if use_affine:
+                scale, offset = fold_affine(layer)
+                add_full(scale)
+                add_full(offset)
     if seg.fuse_head:
         add_full(params["head"]["w"][0, 0, 0])  # (C, num_classes)
         add_full(params["head"]["b"])
+    if deq_in:
+        add_full(staging_scales[seg.start - 1].astype(jnp.float32))
+    if quant_out:
+        last = seg.start + len(seg.dilations) - 1
+        add_full(staging_scales[last].astype(jnp.float32))
     if z_bounds is not None:
         args.append(z_bounds)
         in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
@@ -492,12 +700,14 @@ def _run_segment(
     sizes = seg.buffer_sizes()
     scratch = [
         pltpu.VMEM(sizes[0] + (seg.cin,), act.dtype),
-        pltpu.VMEM(sizes[1] + (seg.channels,), act.dtype),
+        pltpu.VMEM(sizes[1] + (seg.channels,), cdt),
     ]
     if len(seg.dilations) >= 2:
-        scratch.append(pltpu.VMEM(sizes[2] + (seg.channels,), act.dtype))
+        scratch.append(pltpu.VMEM(sizes[2] + (seg.channels,), cdt))
     if seg.fuse_head:
-        scratch.append(pltpu.VMEM(seg.tile + (seg.num_classes,), act.dtype))
+        scratch.append(pltpu.VMEM(seg.tile + (seg.num_classes,), cdt))
+    if quant_out:
+        scratch.append(pltpu.VMEM(seg.tile + (seg.channels,), jnp.int8))
     scratch.append(pltpu.SemaphoreType.DMA((2,)))
 
     kernel = functools.partial(
@@ -505,16 +715,19 @@ def _run_segment(
         seg=seg,
         vol=pln.vol,
         out_halo=out_halo,
-        use_affine=use_affine,
+        use_affine=use_affine or layer_epilogue is not None,
         has_z_bounds=z_bounds is not None,
+        deq_in=deq_in,
+        quant_out=quant_out,
     )
+    out_dtype = jnp.int8 if quant_out else cdt
     grid = (B,) + tuple(p // t for p, t in zip(padded, seg.tile))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
-        out_shape=jax.ShapeDtypeStruct((B,) + out_dims + (seg.cout,), act.dtype),
+        out_shape=jax.ShapeDtypeStruct((B,) + out_dims + (seg.cout,), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
     )(*args)
@@ -530,6 +743,8 @@ def meshnet_apply(
     interpret: bool = True,
     fold_affine=None,
     z_bounds: jax.Array | None = None,
+    precision: str = "fp32",
+    staging_scales: Sequence[jax.Array] | None = None,
 ) -> jax.Array:
     """Depth-first MeshNet forward (== meshnet.apply, eval mode).
 
@@ -541,18 +756,66 @@ def meshnet_apply(
     ``[0, D)``: positions outside it are re-zeroed per layer exactly like
     positions outside the volume. The sharded executor passes the true
     volume's extent inside a slab+halo window (core/spatial_shard.py).
+
+    ``precision`` selects the storage policy (kernels/quantize.py):
+    "fp32" is the legacy bit-exact path below; "bf16" runs the same
+    schedule with bf16 buffers/weights and fp32 accumulate (rounding only
+    at HBM crossings); "int8w" additionally streams per-output-channel
+    int8 weights (dequant folded into the affine epilogue), the int8-
+    quantized conformed input, and — when BatchNorm statistics or the
+    given ``staging_scales`` (quantize.calibrate) bound the activations —
+    int8 inter-segment staging, dequantized on the fly in VMEM. The DP
+    plan is re-optimized for the policy's byte widths, so smaller working
+    sets buy larger tiles and fewer halo re-fetches on top of the per-
+    byte cut (EXPERIMENTS.md H11).
     """
     if x.ndim == 4:
         x = x[..., None]
     B, D, H, W, Cin = x.shape
     vol = (D, H, W)
-    if pln is None:
-        pln = plan_for_config(
-            cfg, vol, vmem_budget=vmem_budget, dtype_bytes=x.dtype.itemsize
-        )
-    use_affine = bool(cfg.use_batchnorm)
-    if use_affine and fold_affine is None:
-        raise ValueError("fold_affine is required when cfg.use_batchnorm")
+    # branch-specific setup; the pad-and-run-segments tail below is shared
+    if precision == "fp32":
+        if pln is None:
+            pln = plan_for_config(
+                cfg, vol, vmem_budget=vmem_budget, dtype_bytes=x.dtype.itemsize
+            )
+        use_affine = bool(cfg.use_batchnorm)
+        if use_affine and fold_affine is None:
+            raise ValueError("fold_affine is required when cfg.use_batchnorm")
+        layer_epilogue = compute_dtype = staging_scales = None
+    else:
+        quantize.validate(precision)
+        params = quantize.prepare_params(params, cfg, precision)
+        compute_dtype = quantize.act_dtype(precision)
+        if precision == "int8w":
+            if x.dtype != jnp.int8:
+                x = quantize.quantize_input(x)
+            if staging_scales is None:
+                staging_scales = quantize.staging_scales_from_bn(params, cfg)
+        else:
+            x = x.astype(compute_dtype)
+            staging_scales = None
+        if pln is None:
+            pln = plan_for_config(
+                cfg,
+                vol,
+                vmem_budget=vmem_budget,
+                precision=precision,
+                int8_staging=staging_scales is not None,
+            )
+        use_affine = True
+        fold_affine = None
+
+        def layer_epilogue(layer, gi, _prec=precision):
+            bias, scale, offset = quantize.fold_epilogue(
+                layer, cfg.use_batchnorm
+            )
+            if gi == 0 and _prec == "int8w":
+                # the conformed volume's fixed int8 dequant scale rides
+                # the first layer's epilogue (conv is linear in its
+                # input scale)
+                scale = scale * quantize.INPUT_SCALE
+            return bias, scale, offset
 
     first = pln.segments[0]
     p0 = pln.padded(first)
@@ -567,5 +830,8 @@ def meshnet_apply(
         act = _run_segment(
             act, seg, pln, i, params, use_affine, fold_affine, interpret,
             z_bounds=z_bounds,
+            layer_epilogue=layer_epilogue,
+            compute_dtype=compute_dtype,
+            staging_scales=staging_scales,
         )
     return act[:, :D, :H, :W, :]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import dice as dice_kernel
 from repro.kernels import dilated_conv3d as conv_kernel
 from repro.kernels import megakernel as mega_kernel
+from repro.kernels import quantize
 
 # interpret=True on CPU (this container); compiled Mosaic on real TPU.
 _INTERPRET = jax.default_backend() != "tpu"
@@ -72,28 +73,77 @@ def fold_batchnorm(layer: dict, eps: float = 1e-5) -> tuple[jax.Array, jax.Array
     return scale, offset
 
 
-def meshnet_apply(params, x: jax.Array, cfg, *, block: int = 16, interpret: bool | None = None) -> jax.Array:
+def meshnet_apply(
+    params,
+    x: jax.Array,
+    cfg,
+    *,
+    block: int = 16,
+    interpret: bool | None = None,
+    precision: str = "fp32",
+) -> jax.Array:
     """Kernel-backed MeshNet inference forward (== meshnet.apply, eval mode).
 
     Each hidden layer is ONE fused Pallas call (conv+BN+ReLU epilogue):
     activations make a single HBM round-trip per layer instead of three.
+
+    ``precision`` (kernels/quantize.py): "fp32" is the legacy bit-exact
+    path; "bf16" ships bf16 activations/weights with fp32 accumulate in
+    the kernel; "int8w" streams per-output-channel int8 weights whose
+    dequant scale rides the (always-fused) affine epilogue — the conv
+    bias moves into the epilogue offset because the raw accumulator is in
+    quantized-weight units. Activations stay bf16 on this per-layer path
+    (inter-layer staging is the schedule itself; only the megakernel has
+    int8 staging boundaries).
     """
     if x.ndim == 4:
         x = x[..., None]
+    if precision == "fp32":
+        for i, d in enumerate(cfg.dilations):
+            layer = params["layers"][i]
+            if cfg.use_batchnorm:
+                scale, offset = fold_batchnorm(layer)
+            else:
+                scale = offset = None
+            x = dilated_conv3d(
+                x, layer["w"], layer["b"],
+                dilation=d, scale=scale, offset=offset, fuse_affine=True,
+                block=block, interpret=interpret,
+            )
+        head = params["head"]
+        # 1x1x1 head: a plain einsum (pointwise) — no spatial kernel needed.
+        return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+
+    quantize.validate(precision)
+    params = quantize.prepare_params(params, cfg, precision)
+    adt = quantize.act_dtype(precision)
+    if precision == "int8w":
+        # match the megakernel/reference rounding: the input is quantized
+        # to the conformed volume's int8 grid, then computed in bf16
+        if x.dtype != jnp.int8:
+            x = quantize.quantize_input(x)
+        x = x.astype(adt) * jnp.asarray(quantize.INPUT_SCALE, adt)
+    else:
+        x = x.astype(adt)
     for i, d in enumerate(cfg.dilations):
         layer = params["layers"][i]
-        if cfg.use_batchnorm:
-            scale, offset = fold_batchnorm(layer)
-        else:
-            scale = offset = None
+        bias, scale, offset = quantize.fold_epilogue(layer, cfg.use_batchnorm)
         x = dilated_conv3d(
-            x, layer["w"], layer["b"],
+            x, layer["w"], bias,
             dilation=d, scale=scale, offset=offset, fuse_affine=True,
             block=block, interpret=interpret,
         )
     head = params["head"]
-    # 1x1x1 head: a plain einsum (pointwise) — no spatial kernel needed.
-    return jnp.einsum("bdhwi,io->bdhwo", x, head["w"][0, 0, 0]) + head["b"]
+    logits = (
+        jnp.einsum(
+            "bdhwi,io->bdhwo",
+            x,
+            head["w"][0, 0, 0].astype(adt),
+            preferred_element_type=jnp.float32,
+        )
+        + head["b"].astype(jnp.float32)
+    )
+    return logits.astype(adt)
 
 
 def meshnet_apply_megakernel(
@@ -104,6 +154,8 @@ def meshnet_apply_megakernel(
     vmem_budget: int | None = None,
     interpret: bool | None = None,
     z_bounds: jax.Array | None = None,
+    precision: str = "fp32",
+    staging_scales=None,
 ) -> jax.Array:
     """Depth-first tiled MeshNet forward (== meshnet.apply, eval mode).
 
@@ -115,6 +167,10 @@ def meshnet_apply_megakernel(
     ``z_bounds`` (dynamic (2,)-int32) narrows the per-layer zero-masked
     Z-valid interval — the sharded executor's slab+halo windows pass the
     true volume extent here (core/spatial_shard.py).
+
+    ``precision``/``staging_scales`` select the storage policy and (for
+    int8w) the calibrated per-channel staging scales — see
+    kernels/megakernel.py and kernels/quantize.py.
     """
     interpret = _INTERPRET if interpret is None else interpret
     return mega_kernel.meshnet_apply(
@@ -125,6 +181,8 @@ def meshnet_apply_megakernel(
         interpret=interpret,
         fold_affine=fold_batchnorm if cfg.use_batchnorm else None,
         z_bounds=z_bounds,
+        precision=precision,
+        staging_scales=staging_scales,
     )
 
 

@@ -254,10 +254,19 @@ class SegmentationEngine:
     executor family (core/spatial_shard.py) — the mesh is built once at
     engine construction and shared by every request (the registry's mesh
     cache keys on the slab count, so per-request overrides that repeat a
-    count also reuse one mesh and one compiled executable)."""
+    count also reuse one mesh and one compiled executable).
+
+    ``precision`` sets the engine's default storage policy
+    (kernels/quantize.py: "fp32" | "bf16" | "int8w" | "auto"); weights
+    are quantized/cast ONCE per policy the first time a request uses it
+    and the prepared pytree is cached, so int8w requests stream the same
+    4x-smaller weights instead of re-quantizing per request
+    (quantize.prepare_params is idempotent — executors accept either
+    form)."""
 
     def __init__(
-        self, params, pipeline_cfg, *, mask_model=None, budget=None, devices=None
+        self, params, pipeline_cfg, *, mask_model=None, budget=None, devices=None,
+        precision=None,
     ):
         from repro.telemetry.budget import MemoryBudget
 
@@ -266,6 +275,8 @@ class SegmentationEngine:
         self.mask_model = mask_model
         self.budget = budget or MemoryBudget.v5e()
         self.devices = devices or getattr(pipeline_cfg, "shard_devices", None)
+        self.precision = precision or getattr(pipeline_cfg, "precision", "auto")
+        self._prepared: dict[str, Any] = {}
         if self.devices and self.devices > 1:
             # Build (and cache) the engine's Z mesh once, up front — not
             # lazily inside the first request's trace.
@@ -276,11 +287,35 @@ class SegmentationEngine:
 
         self.log = TelemetryLog()
 
-    def pick_mode(self, volume_shape) -> str:
+    def _params_for(self, precision: str):
+        """The weight pytree in ``precision`` storage, prepared once per
+        policy and cached for every later request (the streamed-weight
+        footprint is what TelemetryRecord.params_bytes tracks)."""
+        from repro.kernels import quantize
+
+        resolved = quantize.resolve_precision(precision, self.cfg.model)
+        if resolved not in self._prepared:
+            self._prepared[resolved] = quantize.prepare_params(
+                self.params, self.cfg.model, resolved
+            )
+        return self._prepared[resolved]
+
+    def pick_mode(self, volume_shape, precision: str | None = None) -> str:
+        """Budget-driven failsafe selection, priced at the request's
+        storage policy: a bf16/int8w request carries half the activation
+        bytes, so a budget that demotes fp32 to the sub-volume failsafe
+        can still serve it streaming (mirrors pipeline.run's charges)."""
+        from repro.kernels import quantize
         from repro.telemetry.budget import BudgetExceeded
 
+        resolved = quantize.resolve_precision(
+            precision or self.precision, self.cfg.model
+        )
         try:
-            self.budget.charge_streaming(volume_shape, self.cfg.model)
+            self.budget.charge_streaming(
+                volume_shape, self.cfg.model,
+                dtype_bytes=quantize.act_bytes(resolved),
+            )
             return "streaming"
         except BudgetExceeded:
             return "subvolume"
@@ -292,26 +327,31 @@ class SegmentationEngine:
         mode: str | None = None,
         executor: str | None = None,
         devices: int | None = None,
+        precision: str | None = None,
     ):
-        """Run one volume. ``mode``/``executor``/``devices`` override the
-        engine's defaults for this request only; ``mode=None`` keeps the
-        budget-driven failsafe selection, ``executor=None`` keeps the
-        engine config's backend (``"auto"`` resolves per host in the
-        pipeline), and ``devices=None`` keeps the engine's slab count
-        (``devices=1`` forces single-device for this request)."""
+        """Run one volume. ``mode``/``executor``/``devices``/``precision``
+        override the engine's defaults for this request only;
+        ``mode=None`` keeps the budget-driven failsafe selection,
+        ``executor=None`` keeps the engine config's backend (``"auto"``
+        resolves per host in the pipeline), ``devices=None`` keeps the
+        engine's slab count (``devices=1`` forces single-device for this
+        request), and ``precision=None`` keeps the engine's storage
+        policy ("auto" resolves per device+model in the pipeline)."""
         import dataclasses as dc
 
         from repro.core import pipeline as pl
 
-        mode = mode or self.pick_mode(self.cfg.volume_shape)
+        prec = precision or self.precision
+        mode = mode or self.pick_mode(self.cfg.volume_shape, prec)
         cfg = dc.replace(
             self.cfg,
             mode=mode,
             budget=self.budget,
             executor=executor or self.cfg.executor,
             shard_devices=devices if devices is not None else self.devices,
+            precision=prec,
         )
-        res = pl.run(cfg, self.params, vol, mask_model=self.mask_model)
+        res = pl.run(cfg, self._params_for(prec), vol, mask_model=self.mask_model)
         self.log.append(res.record)
         return res
 
@@ -322,19 +362,23 @@ class SegmentationEngine:
         modes: list[str | None] | None = None,
         executors: list[str | None] | None = None,
         devices: list[int | None] | None = None,
+        precisions: list[str | None] | None = None,
     ) -> list:
         """Batched multi-volume submission with per-request mode/executor/
-        device-count selection.
+        device-count/precision selection.
 
         Requests run in submission order; a ``None`` entry in ``modes``
         keeps the budget-driven failsafe selection, a ``None`` entry in
-        ``executors`` keeps the engine config's backend, and a ``None``
-        entry in ``devices`` keeps the engine's slab count. Requests
-        sharing a (mode, executor, devices, shape) reuse one compiled
-        executable regardless of order, via the registry's ``jitted_apply``
-        cache (and one mesh via the slab-count mesh cache). Each telemetry
-        record carries the mode/executor that served it plus the request's
-        queue position in ``extra``.
+        ``executors`` keeps the engine config's backend, a ``None`` entry
+        in ``devices`` keeps the engine's slab count, and a ``None``
+        entry in ``precisions`` keeps the engine's storage policy.
+        Requests sharing a (mode, executor, devices, precision, shape)
+        reuse one compiled executable regardless of order, via the
+        registry's ``jitted_apply`` cache (and one mesh via the
+        slab-count mesh cache; one prepared weight pytree per policy via
+        the engine's cache). Each telemetry record carries the
+        mode/executor/precision that served it plus the request's queue
+        position in ``extra``.
         """
         n = len(vols)
         if modes is not None and len(modes) != n:
@@ -343,13 +387,21 @@ class SegmentationEngine:
             raise ValueError(f"executors must match len(vols): {len(executors)} != {n}")
         if devices is not None and len(devices) != n:
             raise ValueError(f"devices must match len(vols): {len(devices)} != {n}")
+        if precisions is not None and len(precisions) != n:
+            raise ValueError(
+                f"precisions must match len(vols): {len(precisions)} != {n}"
+            )
         modes = modes if modes is not None else [None] * n
         execs = executors if executors is not None else [None] * n
         devs = devices if devices is not None else [None] * n
+        precs = precisions if precisions is not None else [None] * n
 
         results = []
         for i, vol in enumerate(vols):
-            res = self.submit(vol, mode=modes[i], executor=execs[i], devices=devs[i])
+            res = self.submit(
+                vol, mode=modes[i], executor=execs[i], devices=devs[i],
+                precision=precs[i],
+            )
             res.record.extra["request_index"] = i
             results.append(res)
         return results

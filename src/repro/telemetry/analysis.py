@@ -85,3 +85,57 @@ def regression_adjustment(treatment, outcome, confounders) -> float:
     X = np.column_stack([np.ones(len(treatment)), treatment, confounders])
     coef, *_ = np.linalg.lstsq(X, outcome, rcond=None)
     return float(coef[1])
+
+
+@dataclasses.dataclass
+class PrecisionSummary:
+    """Aggregate of one (executor, precision) serving cell."""
+
+    executor: str
+    precision: str
+    runs: int
+    ok_rate: float
+    mean_hbm_bytes: float  # modeled, per run (0 when unmodeled)
+    mean_collective_bytes: float
+    mean_params_bytes: float
+
+    def row(self) -> str:
+        return (
+            f"{self.executor},{self.precision},{self.runs},"
+            f"{self.ok_rate:.3f},{self.mean_hbm_bytes:.0f},"
+            f"{self.mean_collective_bytes:.0f},{self.mean_params_bytes:.0f}"
+        )
+
+
+def precision_summary(records) -> list[PrecisionSummary]:
+    """Per-(executor, precision) traffic/footprint aggregates over a
+    telemetry log — the fleet view of the precision policy: which backend
+    ran at which storage policy, how often it succeeded, and the modeled
+    HBM / collective / weight bytes it moved (TelemetryRecord.precision
+    and .params_bytes, stamped by core/pipeline.py). Sorted by descending
+    run count so the dominant serving cell leads."""
+    cells: dict = {}
+    for r in records:
+        key = (r.executor or "?", r.precision or "fp32")
+        cells.setdefault(key, []).append(r)
+    out = []
+    for (executor, precision), rs in cells.items():
+        ok = sum(1 for r in rs if r.status == "ok")
+        out.append(
+            PrecisionSummary(
+                executor=executor,
+                precision=precision,
+                runs=len(rs),
+                ok_rate=ok / len(rs),
+                mean_hbm_bytes=float(
+                    np.mean([r.hbm_bytes_modeled or 0 for r in rs])
+                ),
+                mean_collective_bytes=float(
+                    np.mean([r.collective_bytes_modeled or 0 for r in rs])
+                ),
+                mean_params_bytes=float(
+                    np.mean([r.params_bytes or 0 for r in rs])
+                ),
+            )
+        )
+    return sorted(out, key=lambda s: -s.runs)

@@ -51,6 +51,14 @@ class TelemetryRecord:
     # single-device executors, the traffic.meshnet_collective_bytes model
     # for the sharded family (core/spatial_shard.py, DESIGN.md §2.2).
     collective_bytes_modeled: Optional[int] = None
+    # storage policy the forward ran under (kernels/quantize.py:
+    # fp32 | bf16 | int8w) — the server-side analogue of the paper logging
+    # the client's texture precision; hbm/collective bytes above are
+    # priced at this policy's widths.
+    precision: Optional[str] = None
+    # bytes of the (possibly quantized) weight pytree the executor
+    # streams — 4x smaller under int8w (quantize.model_params_bytes).
+    params_bytes: Optional[int] = None
     fail_type: Optional[str] = None
     crop_size: Optional[tuple] = None
     # device context (the simulator's stand-ins for GPU card / texture size)

@@ -1,4 +1,5 @@
-"""Modeled HBM bytes per MeshNet forward, per executor backend.
+"""Modeled HBM bytes per MeshNet forward, per executor backend and
+precision policy.
 
 The TPU analogue of Brainchop's texture-bandwidth cost model: every
 executor's schedule implies a deterministic amount of HBM traffic, and —
@@ -9,7 +10,7 @@ budget model in telemetry/budget.py: the numbers drive the DESIGN.md §2
 traffic table, the ``traffic`` benchmark section, the ``BENCH_2.json``
 perf trajectory, and the per-run ``hbm_bytes_modeled`` telemetry field.
 
-Modeling conventions (counted per forward, ``dtype_bytes`` per element):
+Modeling conventions (counted per forward):
   * every XLA op materialises its output: a pad is a read + padded write,
     an elementwise stage is a read + write round-trip;
   * a Pallas grid step re-fetches each of its input blocks — consecutive
@@ -20,9 +21,22 @@ Modeling conventions (counted per forward, ``dtype_bytes`` per element):
     counted — at 16^3 benchmark volumes they are not negligible);
   * scratch/VMEM traffic is free; only HBM crossings count.
 
+Precision (kernels/quantize.py): every model takes the storage policy
+and prices each tensor role at its width — activations (fp32 4 B / bf16
+& int8w compute 2 B), weights (4/2/1 B), and for the megakernel the
+input volume and inter-segment staging (down to 1 B under int8w). The
+layer-wise backends (xla / pallas_fused / streaming) dequantize the
+input up-front, so their volume crossings are priced at the activation
+width; the megakernel is the backend whose schedule actually streams
+int8 end-to-end, which is why the int8w gate (<= 0.4x fp32 at 256^3,
+EXPERIMENTS.md H11) is stated on it. ``precision="fp32"`` reproduces the
+pre-policy numbers bit-for-bit (the regression gate compares like-for-
+like precision keys).
+
 The pluggable executor registry wires these to its specs
 (``core/executors.py``), so ``pipeline.run`` records bytes for whichever
-backend served a request without knowing how it is scheduled.
+(backend, precision) served a request without knowing how it is
+scheduled.
 """
 
 from __future__ import annotations
@@ -30,7 +44,7 @@ from __future__ import annotations
 import math
 from typing import Sequence
 
-from repro.kernels import megakernel
+from repro.kernels import megakernel, quantize
 
 Shape3 = Sequence[int]
 
@@ -43,22 +57,30 @@ def _vox(shape: Shape3) -> int:
     return math.prod(int(s) for s in shape)
 
 
-def meshnet_xla_bytes(cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4) -> int:
+def _widths(precision: str) -> tuple[int, int]:
+    """(activation, weight) byte widths for the layer-wise schedules."""
+    return quantize.act_bytes(precision), quantize.weight_bytes(precision)
+
+
+def meshnet_xla_bytes(
+    cfg, vol: Shape3, batch: int = 1, precision: str = "fp32"
+) -> int:
     """Reference XLA graph: each layer is conv -> BN -> ReLU, three
     materialised stages (the "three HBM round-trips per layer" the fused
     path collapses, EXPERIMENTS.md §Perf H1). Conv itself is modeled at
     its traffic floor (read once, write once) — generous to XLA."""
+    ab, wb = _widths(precision)
     v = _vox(vol)
     total = 0
     cin = cfg.in_channels
     c = cfg.channels
     stages = 3 if cfg.use_batchnorm else 2  # conv, (bn,) relu
     for _ in cfg.dilations:
-        total += v * (cin + c) * dtype_bytes  # conv read + write
-        total += (stages - 1) * 2 * v * c * dtype_bytes  # bn/relu round-trips
-        total += 27 * cin * c * dtype_bytes
+        total += v * (cin + c) * ab  # conv read + write
+        total += (stages - 1) * 2 * v * c * ab  # bn/relu round-trips
+        total += 27 * cin * c * wb
         cin = c
-    total += v * (c + cfg.num_classes) * dtype_bytes  # 1x1x1 head
+    total += v * (c + cfg.num_classes) * ab  # 1x1x1 head
     return batch * total
 
 
@@ -69,67 +91,73 @@ def dilated_conv_layer_bytes(
     dilation: int,
     block: int = 16,
     dtype_bytes: int = 4,
+    weight_dtype_bytes: int | None = None,
 ) -> int:
     """One fused haloed-load conv call (kernels/dilated_conv3d.py, variant
     "halo"): the d-halo pad round-trip, one (block+2d)^3 window DMA per
-    output block (+ the streamed weights), and the fused write. The
-    per-layer term of ``meshnet_fused_bytes``; the kernels benchmark
-    prices single conv rows with it."""
+    output block (+ the streamed weights at their own width), and the
+    fused write. The per-layer term of ``meshnet_fused_bytes``; the
+    kernels benchmark prices single conv rows with it."""
     p = [_ceil_to(v, block) for v in vol]
     ntiles = math.prod(pp // block for pp in p)
     total = _vox(vol) * cin * dtype_bytes  # halo pad read...
     total += math.prod(pp + 2 * dilation for pp in p) * cin * dtype_bytes  # + write
     window = (block + 2 * dilation) ** 3
-    wgt = 27 * cin * cout * dtype_bytes
+    wgt = 27 * cin * cout * (weight_dtype_bytes or dtype_bytes)
     total += ntiles * (window * cin * dtype_bytes + wgt)
     total += math.prod(p) * cout * dtype_bytes  # fused conv+BN+ReLU write
     return total
 
 
 def meshnet_fused_bytes(
-    cfg, vol: Shape3, batch: int = 1, block: int = 16, dtype_bytes: int = 4
+    cfg, vol: Shape3, batch: int = 1, block: int = 16, precision: str = "fp32"
 ) -> int:
     """Per-layer fused Pallas path (ops.meshnet_apply): one
     ``dilated_conv_layer_bytes`` term per layer, then the head einsum."""
+    ab, wb = _widths(precision)
     total = 0
     cin = cfg.in_channels
     c = cfg.channels
     for d in cfg.dilations:
-        total += dilated_conv_layer_bytes(vol, cin, c, d, block, dtype_bytes)
+        total += dilated_conv_layer_bytes(
+            vol, cin, c, d, block, ab, weight_dtype_bytes=wb
+        )
         cin = c
-    total += _vox(vol) * (c + cfg.num_classes) * dtype_bytes  # head einsum
+    total += _vox(vol) * (c + cfg.num_classes) * ab  # head einsum
     return batch * total
 
 
 def meshnet_views_bytes(
-    cfg, vol: Shape3, batch: int = 1, block: int = 16, dtype_bytes: int = 4
+    cfg, vol: Shape3, batch: int = 1, block: int = 16, precision: str = "fp32"
 ) -> int:
     """The pre-halo-load 27-view schedule (variant="views"): every grid
     step streams 27 full blocks regardless of dilation — the ~28x-off
     baseline the haloed load replaced (DESIGN.md §2)."""
+    ab, wb = _widths(precision)
     total = 0
     cin = cfg.in_channels
     c = cfg.channels
     for _ in cfg.dilations:
         p = [_ceil_to(v, block) for v in vol]
         ntiles = math.prod(pp // block for pp in p)
-        total += _vox(vol) * cin * dtype_bytes  # block-halo pad read
-        total += math.prod(pp + 2 * block for pp in p) * cin * dtype_bytes
-        wgt = 27 * cin * c * dtype_bytes
-        total += ntiles * (27 * block**3 * cin * dtype_bytes + wgt)
-        total += math.prod(p) * c * dtype_bytes
+        total += _vox(vol) * cin * ab  # block-halo pad read
+        total += math.prod(pp + 2 * block for pp in p) * cin * ab
+        wgt = 27 * cin * c * wb
+        total += ntiles * (27 * block**3 * cin * ab + wgt)
+        total += math.prod(p) * c * ab
         cin = c
-    total += _vox(vol) * (c + cfg.num_classes) * dtype_bytes
+    total += _vox(vol) * (c + cfg.num_classes) * ab
     return batch * total
 
 
 def meshnet_streaming_bytes(
-    cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4
+    cfg, vol: Shape3, batch: int = 1, precision: str = "fp32"
 ) -> int:
     """Scan-over-layers schedule (core/streaming.py): a memory-floor
     path, not a traffic-optimal one — each scanned layer pads the carry
     by the max dilation and gathers 27 dynamic-slice taps, each tap a
     read + accumulator round-trip."""
+    ab, wb = _widths(precision)
     v = _vox(vol)
     dmax = max(cfg.dilations)
     vp = math.prod(int(s) + 2 * dmax for s in vol)
@@ -140,15 +168,15 @@ def meshnet_streaming_bytes(
         if i == 0:
             # first layer runs unstacked, as the plain XLA block
             stages = 3 if cfg.use_batchnorm else 2
-            total += v * (cin + c) * dtype_bytes
-            total += (stages - 1) * 2 * v * c * dtype_bytes
+            total += v * (cin + c) * ab
+            total += (stages - 1) * 2 * v * c * ab
         else:
-            total += v * c * dtype_bytes + vp * c * dtype_bytes  # pad carry
-            total += 27 * (vp + 2 * v) * c * dtype_bytes  # taps + acc r/w
-            total += 2 * v * c * dtype_bytes  # bn+relu epilogue
-        total += 27 * cin * c * dtype_bytes
+            total += v * c * ab + vp * c * ab  # pad carry
+            total += 27 * (vp + 2 * v) * c * ab  # taps + acc r/w
+            total += 2 * v * c * ab  # bn+relu epilogue
+        total += 27 * cin * c * wb
         cin = c
-    total += v * (c + cfg.num_classes) * dtype_bytes
+    total += v * (c + cfg.num_classes) * ab
     return batch * total
 
 
@@ -156,23 +184,30 @@ def meshnet_megakernel_bytes(
     cfg,
     vol: Shape3,
     batch: int = 1,
-    dtype_bytes: int = 4,
+    precision: str = "fp32",
     vmem_budget: int | None = None,
 ) -> int:
     """Depth-first tiled megakernel: the planner's own traffic model
     (kernels/megakernel.py) — haloed tile reads per segment, one logits
-    write, zero intra-segment activation traffic."""
+    write, zero intra-segment activation traffic. The plan is
+    re-optimized per precision (smaller working sets buy larger tiles),
+    and each tensor role is priced at its policy width, including the
+    int8 input and staging streams under "int8w"."""
     pln = megakernel.plan_for_config(
         cfg,
         tuple(int(s) for s in vol),
         vmem_budget=vmem_budget or megakernel.VMEM_BUDGET,
-        dtype_bytes=dtype_bytes,
+        precision=None if precision == "fp32" else precision,
     )
-    return pln.hbm_bytes(batch=batch, dtype_bytes=dtype_bytes)
+    return pln.hbm_bytes(batch=batch)
 
 
 def meshnet_collective_bytes(
-    cfg, vol: Shape3, num_devices: int, batch: int = 1, dtype_bytes: int = 4
+    cfg,
+    vol: Shape3,
+    num_devices: int,
+    batch: int = 1,
+    precision: str = "fp32",
 ) -> int:
     """Modeled inter-device (ICI) bytes of one Z-sharded forward
     (core/spatial_shard.py, DESIGN.md §2.2).
@@ -181,17 +216,20 @@ def meshnet_collective_bytes(
     the layer-wise schedule, ``2 * sum(dilations)`` Z-slices of the hidden
     activation in each direction:
 
-        per_boundary = 2 * sum(dilations) * H * W * C_hidden * dtype
+        per_boundary = 2 * sum(dilations) * H * W * C_hidden * act_bytes
 
     (the one-shot RF-radius fetch of the megakernel inner moves the same
     slice count once, at the input channel width — this single formula is
-    the accounting convention for the whole family). Zero at one device;
-    monotone in device count (tests/test_properties.py)."""
+    the accounting convention for the whole family). Reduced precisions
+    exchange bf16 slabs, so the halo bill halves with the activations.
+    Zero at one device; monotone in device count
+    (tests/test_properties.py)."""
     n = int(num_devices)
     if n <= 1:
         return 0
+    ab = quantize.act_bytes(precision)
     _, h, w = (int(s) for s in vol)
-    per_boundary = 2 * sum(cfg.dilations) * h * w * cfg.channels * dtype_bytes
+    per_boundary = 2 * sum(cfg.dilations) * h * w * cfg.channels * ab
     return batch * (n - 1) * per_boundary
 
 
@@ -201,7 +239,7 @@ def meshnet_sharded_bytes(
     vol: Shape3,
     num_devices: int,
     batch: int = 1,
-    dtype_bytes: int = 4,
+    precision: str = "fp32",
 ) -> int:
     """Modeled HBM bytes of one Z-sharded forward: every device runs the
     inner schedule on its slab, so the total is ``n`` times the inner
@@ -221,11 +259,11 @@ def meshnet_sharded_bytes(
     if inner == "pallas_megakernel":
         radius = sum(cfg.dilations)
         per_dev = meshnet_megakernel_bytes(
-            cfg, (dloc + 2 * radius, h, w), batch=batch, dtype_bytes=dtype_bytes
+            cfg, (dloc + 2 * radius, h, w), batch=batch, precision=precision
         )
     else:
         fn = EXECUTOR_MODELS[inner]
-        per_dev = fn(cfg, (dloc, h, w), batch=batch, dtype_bytes=dtype_bytes)
+        per_dev = fn(cfg, (dloc, h, w), batch=batch, precision=precision)
     return n * per_dev
 
 
@@ -241,8 +279,8 @@ EXECUTOR_MODELS = {
 
 
 def executor_hbm_bytes(
-    name: str, cfg, vol: Shape3, batch: int = 1, dtype_bytes: int = 4
+    name: str, cfg, vol: Shape3, batch: int = 1, precision: str = "fp32"
 ) -> int | None:
     """Modeled bytes for a registered executor, or None if unmodeled."""
     fn = EXECUTOR_MODELS.get(name)
-    return None if fn is None else fn(cfg, vol, batch=batch, dtype_bytes=dtype_bytes)
+    return None if fn is None else fn(cfg, vol, batch=batch, precision=precision)
