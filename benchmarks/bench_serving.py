@@ -1,0 +1,161 @@
+"""Serving-tier load benchmark: drive the continuous-batching scheduler
+through the three committed traffic scenarios on the deterministic
+virtual-clock simulator (src/repro/serving/simulator.py).
+
+Every number here is *virtual-clock*, derived from seeded arrivals and
+the modeled-bytes service model — two runs with the same seed are
+byte-identical on any machine, which is why the ``serving`` section of
+BENCH_2.json is gated ABSOLUTELY by benchmarks/check_regression.py (no
+machine normalization: these keys cannot drift with runner speed, only
+with scheduler behavior).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --seed 0
+    PYTHONPATH=src python -m benchmarks.bench_serving --scenario overload --json-out SUMMARY.json
+    PYTHONPATH=src python -m benchmarks.bench_serving --soak 3600   # CI's virtual-hour soak
+
+``--json-out`` writes the full per-scenario summaries (the golden-trace
+payloads); ``benchmarks.run serving`` consumes ``bench()`` for the
+BENCH_2.json rows. ``--soak H`` stretches the horizon to H virtual
+seconds and asserts conservation + shedding invariants instead of
+printing rows — the CI serving job runs a one-virtual-hour soak in about
+a minute of CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# benchmarks/ is run both as a module (python -m benchmarks.bench_serving)
+# and imported by benchmarks.run; repro comes from PYTHONPATH=src.
+
+
+def _engine():
+    """The canonical trace engine (simulator.reference_engine): the
+    benchmark exercises the scheduler, not the kernels, so the model and
+    volumes stay tiny and execution is modeled (execute=False in the
+    presets)."""
+    from repro.serving.simulator import reference_engine
+
+    return reference_engine()
+
+
+def run_scenarios(scenarios, seed: int = 0, horizon_s=None):
+    """name -> summary dict for each requested scenario preset."""
+    from repro.serving import simulator as sim
+
+    out = {}
+    for name in scenarios:
+        engine = _engine()
+        rep = sim.simulate(engine, sim.preset(name, seed=seed, horizon_s=horizon_s))
+        out[name] = rep.summary()
+    return out
+
+
+def bench(seed: int = 0) -> list:
+    """(name, us_per_call, hbm_bytes_modeled, note) rows for benchmarks.run
+    — the gated BENCH_2.json ``serving`` section. ``us_per_call`` carries
+    the virtual-clock latency percentile in microseconds (deterministic,
+    so the gate is absolute); ``hbm_bytes_modeled`` is None (the traffic
+    section already gates modeled bytes per backend)."""
+    from repro.serving import simulator as sim
+
+    rows = []
+    for name, s in run_scenarios(sim.PRESETS, seed=seed).items():
+        lat = s["latency_ms"]
+        req = s["requests"]
+        note = (
+            f"served={req['completed'] + req['demoted']}"
+            f";demoted={req['demoted']};refused={req['refused']}"
+        )
+        rows.append((f"serving_{name}_p50", lat["p50"] * 1e3, None, note))
+        rows.append((f"serving_{name}_p99", lat["p99"] * 1e3, None, note))
+        rows.append(
+            (
+                f"serving_{name}_wait_p99_interactive",
+                s["classes"]["interactive"]["queue_wait_ms"]["p99"] * 1e3,
+                None,
+                "priority-protected class",
+            )
+        )
+    return rows
+
+
+def soak(horizon_s: float, seed: int = 0) -> int:
+    """The CI soak: one long virtual window of the overload scenario.
+    Asserts the hard serving invariants — conservation (zero lost
+    requests), typed shedding under overload, and a priority-protected
+    interactive tail — and prints the summary. Returns a process exit
+    code."""
+    s = run_scenarios(["overload"], seed=seed, horizon_s=horizon_s)["overload"]
+    print(json.dumps(s, indent=1, sort_keys=True))
+    req = s["requests"]
+    ok = True
+    if not req["conserved"]:
+        print("SOAK FAIL: conservation violated", file=sys.stderr)
+        ok = False
+    if req["arrived"] != req["refused"] + req["admitted"]:
+        print("SOAK FAIL: arrivals lost before admission", file=sys.stderr)
+        ok = False
+    shed = req["refused"] + req["demoted"] + sum(req["rejected"].values())
+    if shed == 0:
+        print("SOAK FAIL: overload produced no shedding", file=sys.stderr)
+        ok = False
+    inter = s["classes"].get("interactive")
+    if inter and inter["queue_wait_ms"]["p99"] > 5_000.0:
+        print("SOAK FAIL: interactive p99 wait above 5 s", file=sys.stderr)
+        ok = False
+    print(f"\nsoak {'OK' if ok else 'FAILED'}: horizon={s['horizon_s']}s "
+          f"arrived={req['arrived']} shed={shed} "
+          f"interactive_p99_wait_ms={inter['queue_wait_ms']['p99'] if inter else '-'}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        help="preset name (steady|burst|overload); repeatable; default all",
+    )
+    ap.add_argument("--horizon", type=float, default=None, help="virtual seconds")
+    ap.add_argument("--json-out", help="write the per-scenario summaries here")
+    ap.add_argument(
+        "--soak",
+        type=float,
+        default=None,
+        metavar="SECONDS",
+        help="run the overload soak for this many VIRTUAL seconds and "
+        "assert serving invariants (CI uses 3600 — one virtual hour)",
+    )
+    args = ap.parse_args(argv)
+    if args.soak is not None:
+        return soak(args.soak, seed=args.seed)
+
+    from repro.serving import simulator as sim
+
+    scenarios = args.scenario or list(sim.PRESETS)
+    summaries = run_scenarios(scenarios, seed=args.seed, horizon_s=args.horizon)
+    print(
+        "scenario,arrived,refused,admitted,completed,demoted,rejected,"
+        "p50_ms,p99_ms,throughput_rps,mean_batch_size"
+    )
+    for name, s in summaries.items():
+        req = s["requests"]
+        print(
+            f"{name},{req['arrived']},{req['refused']},{req['admitted']},"
+            f"{req['completed']},{req['demoted']},{sum(req['rejected'].values())},"
+            f"{s['latency_ms']['p50']},{s['latency_ms']['p99']},"
+            f"{s['throughput_rps']},{s['mean_batch_size']}"
+        )
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(summaries, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,9 +32,22 @@ while fp32 rows keep their legacy un-suffixed names — so the per-key
 diff above always compares like-for-like precision (an int8w run can
 never mask an fp32 regression, and vice versa).
 
+Virtual sections (``serving``): these rows are *virtual-clock* numbers
+from the deterministic load simulator — identical on any machine by
+construction — so they are (a) EXCLUDED from the machine-speed median
+(they would drag it toward 1.0 and make real timing keys fail on slow
+runners) and (b) gated ABSOLUTELY: any growth beyond ``--virtual-us-tol``
+(default 0, i.e. byte-exact or better) fails, with no normalization. A
+p99 that moved means scheduler behavior changed; regenerate the baseline
+in the same PR so the diff is reviewed, never absorbed.
+
+``--sections A,B`` restricts the comparison to those sections (CI's
+serving job gates only its own section without re-running the kernel
+benches; missing-key detection then applies within the subset).
+
 Usage:
     python benchmarks/check_regression.py FRESH.json [--baseline BENCH_2.json]
-                                          [--us-tol 0.25]
+                                          [--us-tol 0.25] [--sections serving]
 """
 
 from __future__ import annotations
@@ -46,6 +59,10 @@ import statistics
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
+
+#: sections whose us_per_call is virtual-clock (deterministic simulator
+#: output): excluded from machine normalization, gated absolutely.
+VIRTUAL_SECTIONS = frozenset({"serving"})
 
 
 def _load(path: str) -> dict:
@@ -66,19 +83,28 @@ def _index(trajectory: dict) -> dict[tuple[str, str], dict]:
 
 def _machine_factor(fresh_idx: dict, base_idx: dict) -> float:
     """Median fresh/baseline us ratio over shared timed keys — the
-    wholesale speed difference between the two machines."""
+    wholesale speed difference between the two machines. Virtual-clock
+    sections are excluded: their ratio is 1.0 by construction and would
+    bias the median toward 'no drift' on genuinely slower runners."""
     ratios = [
         fresh_idx[k]["us_per_call"] / base_idx[k]["us_per_call"]
         for k in base_idx
         if k in fresh_idx
+        and k[0] not in VIRTUAL_SECTIONS
         and base_idx[k]["us_per_call"] > 0
         and fresh_idx[k]["us_per_call"] > 0
     ]
     return statistics.median(ratios) if ratios else 1.0
 
 
+def _filter_sections(trajectory: dict, sections) -> dict:
+    if not sections:
+        return trajectory
+    return {k: v for k, v in trajectory.items() if k in sections}
+
+
 def compare(
-    fresh: dict, baseline: dict, us_tol: float
+    fresh: dict, baseline: dict, us_tol: float, virtual_us_tol: float = 0.0
 ) -> tuple[list[str], list[str]]:
     """(failures, report_lines) for the fresh-vs-baseline diff."""
     fresh_idx = _index(fresh)
@@ -87,7 +113,9 @@ def compare(
     factor = _machine_factor(fresh_idx, base_idx)
     lines = [
         f"machine-speed factor (median us ratio): {factor:.2f}x — per-key "
-        f"us gate is +{us_tol:.0%} relative to it",
+        f"us gate is +{us_tol:.0%} relative to it; virtual sections "
+        f"({', '.join(sorted(VIRTUAL_SECTIONS))}) gated absolutely at "
+        f"+{virtual_us_tol:.0%}",
         f"{'section':<10} {'name':<55} {'us_base':>12} {'us_fresh':>12} "
         f"{'us_delta':>9} {'hbm_base':>16} {'hbm_fresh':>16} verdict",
     ]
@@ -114,18 +142,46 @@ def compare(
             continue
         verdicts = []
         us_delta = "-"
-        if b["us_per_call"] > 0 and f["us_per_call"] > 0:
-            # machine-normalized: how much this key moved relative to the
-            # suite-wide median drift
-            rel = f["us_per_call"] / (b["us_per_call"] * factor) - 1.0
-            us_delta = f"{rel:+.0%}"
-            if rel > us_tol:
-                failures.append(
-                    f"{key}: us_per_call {b['us_per_call']:.1f} -> "
-                    f"{f['us_per_call']:.1f} ({rel:+.0%} vs suite median "
-                    f"> +{us_tol:.0%})"
-                )
-                verdicts.append("US-REGRESSED")
+        if (
+            key[0] in VIRTUAL_SECTIONS
+            and b["us_per_call"] > 0
+            and f["us_per_call"] == 0
+        ):
+            # a deterministic latency percentile collapsing to zero means
+            # the scenario served nothing — that is a scheduler bug, not
+            # an improvement, and must not slip past the >0 guard below
+            failures.append(
+                f"{key}: virtual us_per_call {b['us_per_call']:.1f} -> 0 "
+                "(scenario collapsed — nothing served?)"
+            )
+            verdicts.append("VIRTUAL-COLLAPSED")
+        elif b["us_per_call"] > 0 and f["us_per_call"] > 0:
+            if key[0] in VIRTUAL_SECTIONS:
+                # virtual-clock key: deterministic, so no machine factor —
+                # any growth beyond the (default zero) tolerance is a real
+                # scheduler-behavior regression
+                rel = f["us_per_call"] / b["us_per_call"] - 1.0
+                us_delta = f"{rel:+.1%}"
+                if rel > virtual_us_tol:
+                    failures.append(
+                        f"{key}: virtual us_per_call {b['us_per_call']:.1f} -> "
+                        f"{f['us_per_call']:.1f} ({rel:+.1%} absolute "
+                        f"> +{virtual_us_tol:.0%}; deterministic key — "
+                        "regenerate the baseline if the change is intended)"
+                    )
+                    verdicts.append("VIRTUAL-REGRESSED")
+            else:
+                # machine-normalized: how much this key moved relative to
+                # the suite-wide median drift
+                rel = f["us_per_call"] / (b["us_per_call"] * factor) - 1.0
+                us_delta = f"{rel:+.0%}"
+                if rel > us_tol:
+                    failures.append(
+                        f"{key}: us_per_call {b['us_per_call']:.1f} -> "
+                        f"{f['us_per_call']:.1f} ({rel:+.0%} vs suite median "
+                        f"> +{us_tol:.0%})"
+                    )
+                    verdicts.append("US-REGRESSED")
         hb_b, hb_f = b.get("hbm_bytes_modeled"), f.get("hbm_bytes_modeled")
         if hb_b is not None and hb_f is not None and hb_f > hb_b:
             failures.append(
@@ -148,9 +204,42 @@ def main(argv: list[str] | None = None) -> int:
         default=float(os.environ.get("BENCH_US_TOL", "0.25")),
         help="allowed fractional us_per_call growth (default 0.25)",
     )
+    ap.add_argument(
+        "--virtual-us-tol",
+        type=float,
+        default=float(os.environ.get("BENCH_VIRTUAL_US_TOL", "0.0")),
+        help="allowed absolute growth for virtual-clock sections "
+        "(default 0.0 — deterministic keys must not regress at all)",
+    )
+    ap.add_argument(
+        "--sections",
+        help="comma-separated section subset to compare (default: all)",
+    )
     args = ap.parse_args(argv)
+    sections = (
+        {s.strip() for s in args.sections.split(",") if s.strip()}
+        if args.sections
+        else None
+    )
+    fresh, baseline = _load(args.fresh), _load(args.baseline)
+    if sections:
+        # every requested section must exist in the BASELINE: a typo'd
+        # or renamed-but-not-regenerated section would otherwise filter
+        # the baseline to nothing and the gate would pass having
+        # compared zero keys
+        unknown = sections - set(baseline)
+        if unknown:
+            raise SystemExit(
+                f"--sections {','.join(sorted(unknown))}: not present in "
+                f"baseline {args.baseline} "
+                f"(baseline sections: {sorted(baseline)}; regenerate the "
+                "baseline if a section was renamed)"
+            )
     failures, lines = compare(
-        _load(args.fresh), _load(args.baseline), args.us_tol
+        _filter_sections(fresh, sections),
+        _filter_sections(baseline, sections),
+        args.us_tol,
+        args.virtual_us_tol,
     )
     print("\n".join(lines))
     if failures:

@@ -13,6 +13,10 @@ Sections:
                   every precision policy (H11: int8w <= 0.4x, bf16 <=
                   0.55x of fp32 on the megakernel; fp32 keys stay
                   un-suffixed so the gate diffs like-for-like)
+  [serving]       virtual-clock p50/p99 latencies of the three committed
+                  load scenarios (steady / burst / overload) on the
+                  deterministic serving simulator (bench_serving.py) —
+                  bit-reproducible, gated absolutely (no machine norm)
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -39,7 +43,7 @@ import sys
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
 #: sections emitting (name, us_per_call, hbm_bytes_modeled, note) rows.
-MEASURED_SECTIONS = ("kernels", "executors", "traffic")
+MEASURED_SECTIONS = ("kernels", "executors", "traffic", "serving")
 
 
 def _csv(name: str, us: float, hbm, derived: str = "") -> None:
@@ -83,6 +87,18 @@ def run_traffic() -> list:
 
     rows = bench_kernels.bench_traffic()
     print("\n[traffic] name,us_per_call,hbm_bytes_modeled,derived")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
+def run_serving() -> list:
+    from benchmarks import bench_serving
+
+    rows = bench_serving.bench()
+    print("\n[serving] name,us_per_call,hbm_bytes_modeled,derived")
+    print("# virtual-clock latencies (deterministic discrete-event simulator,")
+    print("# seed 0) — gated ABSOLUTELY by check_regression.py, no machine norm")
     for name, us, hbm, note in rows:
         _csv(name, us, hbm, note)
     return rows
@@ -164,6 +180,7 @@ SECTIONS = {
     "kernels": run_kernels,
     "executors": run_executors,
     "traffic": run_traffic,
+    "serving": run_serving,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,

@@ -1,11 +1,11 @@
-"""Serve a segmentation model with batched requests — the Brainchop
-deployment story on a server: the engine picks full-volume vs failsafe
-sub-volume mode per request from the memory budget, dispatches inference
-through the executor registry (core/executors.py — "auto" resolves to the
-depth-first Pallas megakernel on TPU when its tile plan fits VMEM, else
-the per-layer fused backend; XLA on CPU), runs the pipeline, and records
-telemetry (success rate, stage timings, mode/executor served) like the
-paper's Table III/IV dataset.
+"""Serve segmentation under load — the Brainchop deployment story on a
+server, now through the continuous-batching request scheduler
+(src/repro/serving/scheduler.py, DESIGN.md §5): requests are queued with
+priority classes, priced against an HBM admission budget at their
+storage policy, grouped by compatible (mode, executor, precision, shape)
+signatures into shared-jit dispatch groups, and served with per-request
+telemetry (queue wait, service time, batch size, demotions) — the
+paper's Table III/IV dataset, grown a serving tier.
 
     PYTHONPATH=src python examples/serve_segmentation.py
 """
@@ -32,37 +32,61 @@ engine = SegmentationEngine(params, pc, budget=budget)
 
 key = jax.random.PRNGKey(1)
 vols = []
-for i in range(4):
+for i in range(6):
     key, k = jax.random.split(key)
     vol, _ = mri.generate(k, mri.SyntheticMRIConfig(shape=SHAPE))
     vols.append(vol)
 
-# Batched submission: requests run in order, and any that share a
-# (mode, executor, precision, shape) reuse one compiled executable via the
-# registry's jit cache. The last request pins the explicit streaming
-# executor; the rest use the engine default ("auto"). Per-request
-# ``precisions`` picks the storage policy (DESIGN.md §2.3): the bf16 and
-# int8w requests stream 2x/4x fewer modeled HBM bytes — weights are
-# quantized once per policy and cached by the engine.
-results = engine.submit_many(
-    vols,
-    executors=[None, None, None, "streaming"],
-    precisions=[None, "bf16", "int8w", None],
-)
-for i, res in enumerate(results):
-    t = res.record.times
-    print(f"request {i}: {res.record.status:4s} mode={res.record.mode:10s} "
-          f"executor={res.record.executor:12s} "
-          f"precision={res.record.precision:5s} "
-          f"hbm~{(res.record.hbm_bytes_modeled or 0)/2**20:.0f}MiB "
-          f"inference {t.inference:.2f}s postprocess {t.postprocessing:.2f}s")
+# --- queued serving -----------------------------------------------------
+# submit_async enqueues (nothing runs yet); drain() forms dispatch groups:
+# the four engine-default requests share one resolved signature -> ONE
+# group, one jit-cache entry; the bf16 and int8w requests group apart.
+# Per-request ``precision`` picks the storage policy (DESIGN.md §2.3) —
+# weights are quantized once per policy and cached by the engine.
+for i, vol in enumerate(vols[:4]):
+    engine.submit_async(vol, priority="interactive" if i < 2 else "standard")
+engine.submit_async(vols[4], precision="bf16")
+engine.submit_async(vols[5], precision="int8w")
+
+completions = engine.drain()
+for c in completions:
+    r = c.record
+    print(f"request {c.id}: {c.outcome:9s} status={r.status:4s} "
+          f"mode={r.mode:10s} executor={r.executor:12s} "
+          f"precision={r.precision or '-':5s} class={r.priority_class:11s} "
+          f"batch={r.batch_size} wait={r.queue_wait_s:.3f}s "
+          f"service={r.service_s:.3f}s")
 
 print(f"\nfleet success rate: {engine.log.success_rate()*100:.0f}% "
       f"({len(engine.log.records)} requests)")
+stats = engine.scheduler().stats
+print(f"conservation: admitted={stats.admitted} = completed={stats.completed} "
+      f"+ demoted={stats.demoted} + rejected={stats.rejected_total()} "
+      f"-> {stats.conserved()}")
 
-# The fleet view per (executor, precision) cell (telemetry/analysis.py):
+# The fleet views (telemetry/analysis.py): per (executor, precision) cell
+# and the per-priority-class queue/latency rollup.
 from repro.telemetry import analysis  # noqa: E402
 
 print("\nexecutor,precision,runs,ok_rate,hbm_bytes,collective_bytes,params_bytes")
 for cell in analysis.precision_summary(engine.log.records):
     print(cell.row())
+
+print("\nclass,requests,served,demoted,shed,ok_rate,p50_wait,p99_wait,"
+      "p50_service,p99_service,mean_batch")
+for row in analysis.class_summary(engine.log.records):
+    print(row.row())
+
+# --- load simulation (deterministic, virtual clock) ---------------------
+# The same scheduler under one simulated minute of bursty traffic — every
+# number below is bit-reproducible (seeded arrivals, modeled service).
+from repro.serving import simulator as sim  # noqa: E402
+
+report = sim.simulate(
+    sim.reference_engine(), sim.preset("burst", seed=0, horizon_s=60.0)
+)
+s = report.summary()
+print(f"\nsimulated burst minute: arrived={s['requests']['arrived']} "
+      f"served={s['requests']['completed'] + s['requests']['demoted']} "
+      f"p50={s['latency_ms']['p50']:.0f}ms p99={s['latency_ms']['p99']:.0f}ms "
+      f"mean_batch={s['mean_batch_size']}")

@@ -155,6 +155,11 @@ def run(
         executor=exec_name,
         precision=precision,
         params_bytes=quantize.model_params_bytes(cfg.model, precision),
+        # the simulated device limit this run was admitted against — the
+        # column the paper's texture-size tables condition on, and what
+        # the serving scheduler's fleet rollups group by. None when the
+        # run is unguarded (no budget configured).
+        memory_budget_bytes=None if cfg.budget is None else cfg.budget.bytes_limit,
     )
     try:
         # Pre-flight the sharded family's hard requirements: the host must

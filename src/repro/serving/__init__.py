@@ -1,0 +1,19 @@
+"""Serving tier: engines (engine.py), the continuous-batching request
+scheduler (scheduler.py), and the deterministic load simulator
+(simulator.py). DESIGN.md §5."""
+
+from repro.serving.scheduler import (  # noqa: F401
+    DEFAULT_CLASSES,
+    PriorityClass,
+    QueueFullError,
+    RequestScheduler,
+    SchedulerConfig,
+)
+from repro.serving.simulator import (  # noqa: F401
+    ScenarioSpec,
+    ServiceModel,
+    SimConfig,
+    VirtualClock,
+    preset,
+    simulate,
+)

@@ -19,7 +19,12 @@ construction); the chosen triple — plus the modeled HBM and collective
 halo bytes the backend's schedule moves (telemetry/traffic.py) — is
 recorded in each request's telemetry record. Requests sharing a (mode,
 executor, devices, shape) reuse one compiled executable via the
-registry's jit cache.
+registry's jit cache. The queued path — ``submit_async``/``drain``, and
+``submit_many``'s dispatch — goes through the continuous-batching request
+scheduler (serving/scheduler.py): bounded queue with typed
+``QueueFullError`` backpressure, priority/deadline classes, HBM-priced
+admission with shed-to-subvolume demotion, and dynamic grouping of
+signature-compatible requests.
 
 LMEngine — continuous-batching text generation for any ModelConfig:
 chunked prefill (sequence patching, DESIGN.md §4), ring-buffer KV caches
@@ -286,6 +291,7 @@ class SegmentationEngine:
         from repro.telemetry.record import TelemetryLog
 
         self.log = TelemetryLog()
+        self._scheduler = None  # lazy RequestScheduler (serving/scheduler.py)
 
     def _params_for(self, precision: str):
         """The weight pytree in ``precision`` storage, prepared once per
@@ -329,22 +335,45 @@ class SegmentationEngine:
         devices: int | None = None,
         precision: str | None = None,
     ):
-        """Run one volume. ``mode``/``executor``/``devices``/``precision``
-        override the engine's defaults for this request only;
-        ``mode=None`` keeps the budget-driven failsafe selection,
+        """Run one volume synchronously. ``mode``/``executor``/``devices``
+        /``precision`` override the engine's defaults for this request
+        only; ``mode=None`` keeps the budget-driven failsafe selection,
         ``executor=None`` keeps the engine config's backend (``"auto"``
         resolves per host in the pipeline), ``devices=None`` keeps the
         engine's slab count (``devices=1`` forces single-device for this
         request), and ``precision=None`` keeps the engine's storage
         policy ("auto" resolves per device+model in the pipeline)."""
+        return self._run_request(
+            vol, mode=mode, executor=executor, devices=devices, precision=precision
+        )
+
+    def _run_request(
+        self,
+        vol: jax.Array,
+        *,
+        mode: str | None = None,
+        executor: str | None = None,
+        devices: int | None = None,
+        precision: str | None = None,
+        volume_shape: tuple | None = None,
+    ):
+        """The raw serve path behind ``submit`` and the scheduler: resolve
+        defaults, run the pipeline, log telemetry. (The scheduler calls
+        this per batch member so its typed fault isolation wraps exactly
+        one request's execution.) ``volume_shape`` overrides the engine's
+        conform target for this request — the scheduler's native-shape
+        mode serves each request at its own geometry; ``None`` keeps the
+        engine card's shape (every input is conformed to it)."""
         import dataclasses as dc
 
         from repro.core import pipeline as pl
 
         prec = precision or self.precision
-        mode = mode or self.pick_mode(self.cfg.volume_shape, prec)
+        shape = tuple(volume_shape) if volume_shape else self.cfg.volume_shape
+        mode = mode or self.pick_mode(shape, prec)
         cfg = dc.replace(
             self.cfg,
+            volume_shape=shape,
             mode=mode,
             budget=self.budget,
             executor=executor or self.cfg.executor,
@@ -354,6 +383,57 @@ class SegmentationEngine:
         res = pl.run(cfg, self._params_for(prec), vol, mask_model=self.mask_model)
         self.log.append(res.record)
         return res
+
+    # ---- queued serving (serving/scheduler.py) --------------------------
+
+    def scheduler(self, scheduler_cfg=None, **kwargs):
+        """The engine's request scheduler, created lazily (pass
+        ``scheduler_cfg``/kwargs on FIRST use to configure it; see
+        ``RequestScheduler``). ``submit_async``/``drain`` go through it.
+        Raises if a configuration is passed after the scheduler already
+        exists — silently returning the old instance would leave the
+        caller believing their admission limits are active."""
+        from repro.serving.scheduler import RequestScheduler
+
+        if getattr(self, "_scheduler", None) is None:
+            self._scheduler = RequestScheduler(self, scheduler_cfg, **kwargs)
+        elif scheduler_cfg is not None or kwargs:
+            raise ValueError(
+                "engine.scheduler() was already created (a prior "
+                "submit_async/scheduler call); configuration must be "
+                "passed on first use"
+            )
+        return self._scheduler
+
+    def submit_async(
+        self,
+        vol: jax.Array,
+        *,
+        priority: str = "standard",
+        mode: str | None = None,
+        executor: str | None = None,
+        devices: int | None = None,
+        precision: str | None = None,
+    ) -> int:
+        """Enqueue one request with the continuous-batching scheduler and
+        return its request id — nothing executes until ``drain`` (or an
+        explicit ``scheduler().next_batch``/``run_batch`` loop). Raises
+        ``QueueFullError`` when the admission queue is at depth."""
+        return self.scheduler().submit(
+            vol,
+            priority=priority,
+            mode=mode,
+            executor=executor,
+            devices=devices,
+            precision=precision,
+        )
+
+    def drain(self):
+        """Serve every queued request (dynamic grouping, HBM-budget
+        admission, priority order) and return the id-ordered
+        ``Completion`` list — each with its outcome (completed | demoted
+        | rejected), stamped telemetry record, and pipeline result."""
+        return self.scheduler().drain()
 
     def submit_many(
         self,
@@ -367,19 +447,31 @@ class SegmentationEngine:
         """Batched multi-volume submission with per-request mode/executor/
         device-count/precision selection.
 
-        Requests run in submission order; a ``None`` entry in ``modes``
-        keeps the budget-driven failsafe selection, a ``None`` entry in
-        ``executors`` keeps the engine config's backend, a ``None`` entry
-        in ``devices`` keeps the engine's slab count, and a ``None``
-        entry in ``precisions`` keeps the engine's storage policy.
-        Requests sharing a (mode, executor, devices, precision, shape)
-        reuse one compiled executable regardless of order, via the
-        registry's ``jitted_apply`` cache (and one mesh via the
-        slab-count mesh cache; one prepared weight pytree per policy via
-        the engine's cache). Each telemetry record carries the
-        mode/executor/precision that served it plus the request's queue
-        position in ``extra``.
+        Results come back in submission order; a ``None`` entry in
+        ``modes`` keeps the budget-driven failsafe selection, a ``None``
+        entry in ``executors`` keeps the engine config's backend, a
+        ``None`` entry in ``devices`` keeps the engine's slab count, and
+        a ``None`` entry in ``precisions`` keeps the engine's storage
+        policy.
+
+        Dispatch goes through the request scheduler's grouping
+        (serving/scheduler.py): requests sharing a resolved (mode,
+        executor, devices, precision, shape) signature are served
+        back-to-back as one group — the signature is resolved and priced
+        ONCE per unique combination (not once per request), and the
+        group shares one compiled executable via the registry's
+        ``jitted_apply`` cache, one mesh via the slab-count mesh cache,
+        and one prepared weight pytree per policy via the engine's
+        cache. A request that *raises* (garbage volume, executor bug)
+        yields a failed result with ``fail_type="executor_error"`` while
+        the rest of its group completes. Each telemetry record carries
+        the mode/executor/precision that served it, the scheduler's
+        queue/batch stamps, and the request's submission index in
+        ``extra``.
         """
+        from repro.core.pipeline import PipelineResult
+        from repro.serving.scheduler import RequestScheduler, SchedulerConfig
+
         n = len(vols)
         if modes is not None and len(modes) != n:
             raise ValueError(f"modes must match len(vols): {len(modes)} != {n}")
@@ -396,12 +488,39 @@ class SegmentationEngine:
         devs = devices if devices is not None else [None] * n
         precs = precisions if precisions is not None else [None] * n
 
-        results = []
+        # Legacy semantics preserved: unbounded queue, no batch-level
+        # admission budget (mode selection stays per-request via
+        # pick_mode), and deadline-FREE classes (the default ladder's
+        # wall-clock deadlines would shed the tail of a slow synchronous
+        # batch — the old for-loop ran every request, so must this) —
+        # the scheduler contributes grouping, resolution dedupe, and
+        # fault isolation.
+        from repro.serving.scheduler import DEFAULT_CLASSES, PriorityClass
+
+        sched = RequestScheduler(
+            self,
+            SchedulerConfig(
+                max_queue_depth=None,
+                admission_hbm_bytes=None,
+                max_batch_requests=max(n, 1),
+                allow_demotion=False,
+                classes={
+                    name: PriorityClass(name, c.priority, deadline_s=None)
+                    for name, c in DEFAULT_CLASSES.items()
+                },
+            ),
+        )
         for i, vol in enumerate(vols):
-            res = self.submit(
+            sched.submit(
                 vol, mode=modes[i], executor=execs[i], devices=devs[i],
                 precision=precs[i],
             )
+        completions = sched.drain()
+        results = []
+        for i, comp in enumerate(completions):
+            res = comp.result
+            if res is None:  # typed failure synthesized by the scheduler
+                res = PipelineResult(segmentation=None, record=comp.record)
             res.record.extra["request_index"] = i
             results.append(res)
         return results

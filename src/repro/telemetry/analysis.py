@@ -107,6 +107,121 @@ class PrecisionSummary:
         )
 
 
+@dataclasses.dataclass
+class ClassSummary:
+    """Aggregate of one serving priority class over scheduler-stamped
+    telemetry (TelemetryRecord.priority_class etc., serving/scheduler.py).
+    Times are whatever clock stamped the records — virtual seconds under
+    the load simulator (deterministic), wall seconds in production."""
+
+    priority_class: str
+    requests: int
+    served: int  # reached service (completed or demoted)
+    demoted: int
+    shed: dict  # typed pre-service rejections: fail_type -> count
+    ok_rate: float  # of served requests
+    p50_wait_s: float
+    p99_wait_s: float
+    p50_service_s: float
+    p99_service_s: float
+    mean_batch_size: float
+
+    def row(self) -> str:
+        return (
+            f"{self.priority_class},{self.requests},{self.served},"
+            f"{self.demoted},{sum(self.shed.values())},{self.ok_rate:.3f},"
+            f"{self.p50_wait_s:.4f},{self.p99_wait_s:.4f},"
+            f"{self.p50_service_s:.4f},{self.p99_service_s:.4f},"
+            f"{self.mean_batch_size:.2f}"
+        )
+
+
+#: pre-service shed reasons the scheduler emits (vs execution failures).
+SHED_TYPES = ("queue_full", "deadline_expired", "admission_oom")
+
+
+def nearest_rank(values, q: float) -> float:
+    """Deterministic nearest-rank percentile (no interpolation) — THE
+    percentile of the serving stack: class_summary, the load simulator's
+    summaries, and the golden serving traces all use this one function,
+    so their numbers stay byte-stable and mutually consistent."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    rank = max(1, math.ceil(q / 100.0 * len(s)))
+    return float(s[rank - 1])
+
+
+def class_summary(records) -> list[ClassSummary]:
+    """Per-priority-class queue/latency rollup over a telemetry log — the
+    serving-tier SLO view: how long each class waited, how long service
+    took, how much was demoted or shed. Records without a
+    ``priority_class`` stamp (direct pipeline runs) are skipped. Sorted
+    by class name for stable output."""
+    by: dict[str, list] = {}
+    for r in records:
+        if r.priority_class is not None:
+            by.setdefault(r.priority_class, []).append(r)
+    out = []
+    for name in sorted(by):
+        rs = by[name]
+        shed = {
+            t: sum(1 for r in rs if r.fail_type == t)
+            for t in SHED_TYPES
+            if any(r.fail_type == t for r in rs)
+        }
+        served = [r for r in rs if r.fail_type not in SHED_TYPES]
+        # wait percentiles over SERVED requests only: queue-full refusals
+        # are stamped with zero wait at submit time and would drag the
+        # percentiles down exactly when overload makes them matter
+        waits = [r.queue_wait_s for r in served if r.queue_wait_s is not None]
+        services = [r.service_s for r in served if r.service_s is not None]
+        batches = [r.batch_size for r in served if r.batch_size is not None]
+        out.append(
+            ClassSummary(
+                priority_class=name,
+                requests=len(rs),
+                served=len(served),
+                demoted=sum(1 for r in served if r.demoted),
+                shed=shed,
+                ok_rate=sum(1 for r in served if r.status == "ok")
+                / max(len(served), 1),
+                p50_wait_s=nearest_rank(waits, 50),
+                p99_wait_s=nearest_rank(waits, 99),
+                p50_service_s=nearest_rank(services, 50),
+                p99_service_s=nearest_rank(services, 99),
+                mean_batch_size=float(np.mean(batches)) if batches else 0.0,
+            )
+        )
+    return out
+
+
+def slo_attainment(records, slo_s: dict) -> dict:
+    """Fraction of each class's requests that got a SUCCESSFUL answer
+    within the class's SLO bound, end to end (``queue_wait_s +
+    service_s`` — the scheduler stamps wait up to the member's own
+    service start, so the sum is exactly finish - arrival even deep
+    inside a batch). Classes without a bound in ``slo_s`` are omitted;
+    shed requests AND failed runs count as misses — either way the user
+    spent their patience without an answer."""
+    out: dict[str, float] = {}
+    for s in class_summary(records):
+        bound = slo_s.get(s.priority_class)
+        if bound is None:
+            continue
+        rs = [r for r in records if r.priority_class == s.priority_class]
+        met = sum(
+            1
+            for r in rs
+            if r.status == "ok"
+            and r.queue_wait_s is not None
+            and r.service_s is not None
+            and (r.queue_wait_s + r.service_s) <= bound
+        )
+        out[s.priority_class] = met / max(len(rs), 1)
+    return out
+
+
 def precision_summary(records) -> list[PrecisionSummary]:
     """Per-(executor, precision) traffic/footprint aggregates over a
     telemetry log — the fleet view of the precision policy: which backend

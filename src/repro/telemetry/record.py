@@ -63,6 +63,25 @@ class TelemetryRecord:
     crop_size: Optional[tuple] = None
     # device context (the simulator's stand-ins for GPU card / texture size)
     memory_budget_bytes: Optional[int] = None
+    # ---- serving-path fields (serving/scheduler.py) --------------------
+    # Stamped by the request scheduler on queued requests; None on direct
+    # pipeline runs. Under the deterministic load simulator these are
+    # *virtual-clock* seconds (serving/simulator.py), which is what makes
+    # the fleet latency rollups bit-reproducible in CI.
+    request_id: Optional[int] = None
+    # arrival time of the request on the scheduler's clock
+    arrival_s: Optional[float] = None
+    # time spent queued before its batch started service
+    queue_wait_s: Optional[float] = None
+    # modeled (virtual clock) or measured (real clock) service time
+    service_s: Optional[float] = None
+    # how many requests shared this request's dispatch group (>= 1)
+    batch_size: Optional[int] = None
+    # admission class the scheduler served it under
+    priority_class: Optional[str] = None
+    # True when HBM-budget admission shed the request to the sub-volume
+    # failsafe (the paper's patching intervention, applied as backpressure)
+    demoted: bool = False
     extra: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:

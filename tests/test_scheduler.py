@@ -1,0 +1,408 @@
+"""Scheduler invariants (serving/scheduler.py + serving/simulator.py).
+
+Unit tests pin the admission mechanics — typed queue-full backpressure,
+HBM-budget admission, shed-to-subvolume demotion, priority order,
+deadline expiry, grouping, and the resolution/quantize-once dedupe the
+scheduler gives ``submit_many``. The hypothesis section drives random
+request mixes through the virtual-clock simulator and asserts the
+system-level properties the ISSUE names: conservation (admitted ==
+completed + demoted + rejected — zero lost requests), no starvation,
+admission never exceeding the configured budget, FIFO within a priority
+class, and bit-determinism of the telemetry stream.
+
+Everything here runs on the virtual clock with modeled execution
+(``execute=False``) except the explicitly-real engine tests, so the
+whole file is seconds on CPU.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import meshnet
+from repro.core.meshnet import MeshNetConfig
+from repro.core.pipeline import PipelineConfig
+from repro.serving.engine import SegmentationEngine
+from repro.serving.scheduler import (
+    PriorityClass,
+    QueueFullError,
+    RequestScheduler,
+    SchedulerConfig,
+)
+from repro.serving.simulator import (
+    ScenarioSpec,
+    ServiceModel,
+    SimConfig,
+    VirtualClock,
+    simulate,
+)
+
+KEY = jax.random.PRNGKey(0)
+SMALL = MeshNetConfig(dilations=(1, 2, 4), channels=5)
+
+
+def make_engine(volume_shape=(16, 16, 16), **cfg_kwargs):
+    params = meshnet.init(KEY, SMALL)
+    pc = PipelineConfig(
+        model=SMALL,
+        volume_shape=volume_shape,
+        cube=8,
+        overlap=4,
+        min_component_size=4,
+        executor="xla",
+        **cfg_kwargs,
+    )
+    return SegmentationEngine(params, pc)
+
+
+def make_sched(engine=None, *, clock=None, execute=False, **cfg_kwargs):
+    engine = engine or make_engine()
+    # unit tests exercise shape-driven admission -> native-shape serving
+    cfg_kwargs.setdefault("native_shapes", True)
+    cfg = SchedulerConfig(**cfg_kwargs)
+    return RequestScheduler(
+        engine,
+        cfg,
+        clock=clock or VirtualClock(),
+        service_model=ServiceModel(),
+        execute=execute,
+    )
+
+
+def vol(shape=(16, 16, 16), seed=0):
+    return np.random.default_rng(seed).random(shape, dtype=np.float32)
+
+
+# ------------------------------------------------------------ unit tests ---
+
+
+class TestAdmission:
+    def test_queue_full_is_typed_and_logged(self):
+        sched = make_sched(max_queue_depth=2)
+        sched.submit(vol(), arrival_s=0.0)
+        sched.submit(vol(), arrival_s=0.0)
+        with pytest.raises(QueueFullError) as ei:
+            sched.submit(vol(), arrival_s=0.0)
+        assert ei.value.limit == 2
+        assert sched.stats.refused == 1
+        # the refusal left a typed record in the fleet telemetry
+        shed = [r for r in sched.engine.log.records if r.fail_type == "queue_full"]
+        assert len(shed) == 1 and shed[0].status == "fail"
+        # refused requests are NOT part of the conservation ledger
+        assert sched.stats.admitted == 2
+
+    def test_admission_budget_never_exceeded_per_batch(self):
+        # streaming 16^3 fp32 ~= 0.2 MiB; cap at 2 requests' worth
+        per = make_sched()._price("streaming", (16, 16, 16), "fp32")
+        sched = make_sched(
+            admission_hbm_bytes=2 * per + per // 2,
+            max_batch_requests=8,
+            allow_demotion=False,
+        )
+        for i in range(5):
+            sched.submit(vol(seed=i), mode="streaming", arrival_s=0.0)
+        sizes = []
+        while True:
+            b = sched.next_batch(now=1.0)
+            if b is None:
+                break
+            total = sum(r.bytes_priced for r in b.requests)
+            assert total <= sched.cfg.admission_hbm_bytes
+            sizes.append(len(b.requests))
+            sched.run_batch(b)
+        assert sizes == [2, 2, 1]  # grouped up to the budget, never past it
+        assert sched.stats.conserved()
+
+    def test_oversized_request_demotes_to_subvolume(self):
+        sched = make_sched(admission_hbm_bytes=300_000)  # < 32^3 streaming
+        sched.submit(vol((32, 32, 32)), mode="streaming", arrival_s=0.0)
+        b = sched.next_batch(now=0.0)
+        assert len(b.requests) == 1
+        req = b.requests[0]
+        assert req.demoted and req.key.mode == "subvolume"
+        sched.run_batch(b)
+        assert sched.stats.demoted == 1 and sched.stats.completed == 0
+        rec = sched.completions[0].record
+        assert rec.demoted and rec.mode == "subvolume"
+
+    def test_demoted_requests_still_group(self):
+        """Shed-to-subvolume demotion must not break continuous batching:
+        requests that demote to the SAME failsafe signature dispatch as
+        one group (regression: demotion used to rewrite only the seed's
+        key, so every demoted request paid a solo dispatch)."""
+        # < one 32^3 streaming set (1.7 MiB), >= three failsafe cubes
+        sched = make_sched(admission_hbm_bytes=700_000, max_batch_requests=8)
+        for i in range(3):
+            sched.submit(vol((32, 32, 32), seed=i), mode="streaming", arrival_s=0.0)
+        b = sched.next_batch(now=0.0)
+        assert len(b.requests) == 3
+        assert all(r.demoted and r.key.mode == "subvolume" for r in b.requests)
+        sched.run_batch(b)
+        assert sched.stats.demoted == 3
+        assert sched.completions[0].record.batch_size == 3
+        assert sched.stats.conserved()
+
+    def test_unservable_request_rejected_typed(self):
+        # cap below even the subvolume working set -> typed admission_oom
+        sched = make_sched(admission_hbm_bytes=1024)
+        sched.submit(vol(), arrival_s=0.0)
+        assert sched.next_batch(now=0.0) is None
+        assert sched.stats.rejected == {"admission_oom": 1}
+        comp = sched.completions[0]
+        assert comp.outcome == "rejected"
+        assert comp.record.fail_type == "admission_oom"
+        assert sched.stats.conserved()
+
+    def test_deadline_expiry_sheds_typed(self):
+        clock = VirtualClock()
+        sched = make_sched(
+            clock=clock,
+            classes={"rt": PriorityClass("rt", 0, deadline_s=1.0)},
+        )
+        sched.submit(vol(), priority="rt", arrival_s=0.0)
+        clock.advance_to(5.0)  # the deadline passed while queued
+        assert sched.next_batch() is None
+        assert sched.stats.rejected == {"deadline_expired": 1}
+        assert sched.completions[0].record.priority_class == "rt"
+
+
+class TestModeledExecution:
+    def test_modeled_record_carries_bytes_and_status(self):
+        sched = make_sched()
+        sched.submit(vol(), arrival_s=0.0)
+        sched.run_batch(sched.next_batch(now=0.0))
+        rec = sched.completions[0].record
+        assert rec.status == "ok"
+        assert rec.hbm_bytes_modeled and rec.hbm_bytes_modeled > 0
+        assert rec.params_bytes and rec.params_bytes > 0
+
+    def test_modeled_geometry_failure_is_typed(self):
+        if jax.device_count() > 2:
+            pytest.skip("needs a host with <= 2 devices to force the failure")
+        sched = make_sched()
+        sched.submit(vol(), devices=3, arrival_s=0.0)
+        sched.run_batch(sched.next_batch(now=0.0))
+        rec = sched.completions[0].record
+        assert rec.status == "fail" and rec.fail_type == "shard_geometry"
+        assert sched.stats.conserved()
+
+    def test_modeled_garbage_failure_is_typed_and_solo(self):
+        sched = make_sched()
+        sched.submit(np.zeros((5,), np.float32), arrival_s=0.0)
+        sched.submit(vol(), arrival_s=0.0)
+        b = sched.next_batch(now=0.0)
+        assert len(b.requests) == 1  # garbage never groups
+        sched.run_batch(b)
+        assert sched.completions[0].record.fail_type == "executor_error"
+
+
+class TestOrdering:
+    def test_priority_preempts_arrival_order(self):
+        sched = make_sched()
+        a = sched.submit(vol(seed=1), priority="batch", arrival_s=0.0)
+        b = sched.submit(vol(seed=2), priority="interactive", arrival_s=1.0)
+        batch = sched.next_batch(now=2.0)
+        assert [r.id for r in batch.requests] == [b]  # class mismatch: no group
+        sched.run_batch(batch)
+        batch2 = sched.next_batch(now=3.0)
+        assert [r.id for r in batch2.requests] == [a]
+
+    def test_fifo_within_class_and_signature(self):
+        sched = make_sched(max_batch_requests=2)
+        ids = [sched.submit(vol(seed=i), arrival_s=float(i)) for i in range(5)]
+        served = []
+        while True:
+            b = sched.next_batch(now=10.0)
+            if b is None:
+                break
+            served.extend(r.id for r in b.requests)
+            sched.run_batch(b)
+        assert served == ids  # same class + same signature -> strict FIFO
+
+    def test_grouping_merges_compatible_requests_only(self):
+        sched = make_sched(max_batch_requests=8)
+        sched.submit(vol(seed=0), precision="bf16", arrival_s=0.0)
+        sched.submit(vol(seed=1), precision="fp32", arrival_s=0.0)
+        sched.submit(vol(seed=2), precision="bf16", arrival_s=0.0)
+        b = sched.next_batch(now=0.0)
+        # seed is the oldest request; only the same-precision one groups
+        assert [r.key.precision for r in b.requests] == ["bf16", "bf16"]
+        assert len(b.requests) == 2
+        sched.run_batch(b)
+        assert sched.completions[0].record.batch_size == 2
+
+
+class TestTelemetryStamping:
+    def test_queue_and_service_stamps(self):
+        clock = VirtualClock()
+        sched = make_sched(clock=clock)
+        sched.submit(vol(), arrival_s=0.0)
+        clock.advance_to(2.0)
+        b = sched.next_batch()
+        finish = sched.run_batch(b)
+        rec = sched.completions[0].record
+        assert rec.arrival_s == 0.0
+        # wait runs to the member's own service start (batch overhead
+        # included), so wait + service == finish - arrival exactly
+        assert rec.queue_wait_s == pytest.approx(2.0 + ServiceModel().batch_overhead_s)
+        assert rec.service_s > 0
+        assert rec.batch_size == 1
+        assert rec.priority_class == "standard"
+        assert finish == pytest.approx(rec.arrival_s + rec.queue_wait_s + rec.service_s)
+
+    def test_wait_plus_service_is_end_to_end_for_every_batch_member(self):
+        sched = make_sched(max_batch_requests=4)
+        for i in range(4):
+            sched.submit(vol(seed=i), arrival_s=0.0)
+        sched.run_batch(sched.next_batch(now=1.0))
+        for c in sched.completions:
+            r = c.record
+            assert c.finish_s - c.arrival_s == pytest.approx(
+                r.queue_wait_s + r.service_s
+            )
+        # members serve back-to-back, so later members waited longer
+        waits = [
+            c.record.queue_wait_s
+            for c in sorted(sched.completions, key=lambda c: c.id)
+        ]
+        assert waits == sorted(waits) and waits[-1] > waits[0]
+
+    def test_slo_attainment_counts_failures_as_misses(self):
+        from repro.telemetry import analysis
+
+        engine = make_engine()
+        sched = make_sched(engine)
+        sched.submit(vol(), arrival_s=0.0)
+        sched.submit(np.zeros((5,), np.float32), arrival_s=0.0)  # typed fail
+        sched.drain()
+        att = analysis.slo_attainment(engine.log.records, {"standard": 1e9})
+        assert att["standard"] == pytest.approx(0.5)
+
+    def test_resolution_cached_per_signature(self):
+        """The submit_many fix: N same-signature requests cost ONE
+        mode/executor/precision resolution + pricing, not N."""
+        engine = make_engine()
+        calls = {"pick_mode": 0}
+        orig = engine.pick_mode
+
+        def counting(shape, precision=None):
+            calls["pick_mode"] += 1
+            return orig(shape, precision)
+
+        engine.pick_mode = counting
+        sched = make_sched(engine)
+        for i in range(6):
+            sched.submit(vol(seed=i), arrival_s=0.0)
+        for i in range(3):
+            sched.submit(vol((32, 32, 32), seed=i), arrival_s=0.0)
+        assert calls["pick_mode"] == 2  # one per unique signature
+        assert sched.stats.resolutions == 2
+
+
+class TestEngineQueuedAPI:
+    """submit_async/drain + scheduler-backed submit_many on the REAL
+    pipeline (tiny volumes; xla on CPU)."""
+
+    def test_submit_async_drain_real_execution(self):
+        engine = make_engine()
+        ids = [engine.submit_async(vol(seed=i)) for i in range(3)]
+        comps = engine.drain()
+        assert [c.id for c in comps] == ids
+        for c in comps:
+            assert c.outcome == "completed"
+            assert c.result.record.status == "ok"
+            assert c.result.segmentation.shape == (16, 16, 16)
+            assert c.record.batch_size >= 1
+            assert c.record.service_s is not None  # real-clock measured
+
+    def test_drain_returns_only_new_completions(self):
+        """A submit/drain service loop must never re-deliver results
+        (regression: drain used to return the full completion ledger)."""
+        engine = make_engine()
+        first = engine.submit_async(vol(seed=0))
+        comps1 = engine.drain()
+        assert [c.id for c in comps1] == [first]
+        second = engine.submit_async(vol(seed=1))
+        comps2 = engine.drain()
+        assert [c.id for c in comps2] == [second]
+        assert engine.drain() == []  # nothing new
+
+    def test_submit_many_never_sheds_on_wall_clock(self, monkeypatch):
+        """submit_many is a synchronous batch API: however long earlier
+        groups take in real time, later requests must still run
+        (regression: the default class ladder's wall-clock deadlines
+        leaked into submit_many and shed the tail of slow batches)."""
+        from repro.serving import scheduler as sched_mod
+
+        class JumpyClock:  # every reading is 500 s later than the last
+            def __init__(self):
+                self.t = 0.0
+
+            def now(self):
+                self.t += 500.0
+                return self.t
+
+        monkeypatch.setattr(sched_mod, "_MonotonicClock", JumpyClock)
+        engine = make_engine()
+        results = engine.submit_many(
+            [vol(seed=i) for i in range(3)], precisions=[None, "bf16", None]
+        )
+        assert [r.record.status for r in results] == ["ok"] * 3
+
+    def test_scheduler_config_after_creation_raises(self):
+        engine = make_engine()
+        engine.submit_async(vol())  # lazily creates a default scheduler
+        with pytest.raises(ValueError, match="first use"):
+            engine.scheduler(SchedulerConfig(max_queue_depth=4))
+        engine.drain()
+
+    def test_submit_many_quantize_once_per_policy(self):
+        """Mixed-precision submit_many quantizes each policy exactly once
+        (the prepared-params cache, exercised through the scheduler's
+        grouping)."""
+        from repro.kernels import quantize
+
+        engine = make_engine()
+        calls = {"n": 0}
+        orig = quantize.prepare_params
+
+        def counting(params, cfg, precision):
+            calls["n"] += 1
+            return orig(params, cfg, precision)
+
+        quantize.prepare_params, prev = counting, quantize.prepare_params
+        try:
+            engine.submit_many(
+                [vol(seed=i) for i in range(6)],
+                precisions=[None, "bf16", "int8w", "bf16", "int8w", None],
+            )
+        finally:
+            quantize.prepare_params = prev
+        # engine-level preparation: one call per distinct resolved policy
+        # (executors may re-call on already-prepared pytrees at trace
+        # time — those are idempotent no-ops, not re-quantizations, and
+        # happen at most once per compiled (executor, precision) cell)
+        assert len(engine._prepared) == 3
+        distinct = len(engine._prepared)
+        assert calls["n"] <= 2 * distinct
+        # and the cached pytrees are reused by identity on a second sweep
+        before = {k: id(v) for k, v in engine._prepared.items()}
+        engine.submit_many([vol(seed=9)], precisions=["int8w"])
+        assert {k: id(v) for k, v in engine._prepared.items()} == before
+
+    def test_submit_many_grouping_dedupes_resolution(self):
+        engine = make_engine()
+        calls = {"n": 0}
+        orig = engine.pick_mode
+
+        def counting(shape, precision=None):
+            calls["n"] += 1
+            return orig(shape, precision)
+
+        engine.pick_mode = counting
+        results = engine.submit_many([vol(seed=i) for i in range(5)])
+        assert calls["n"] == 1  # five identical signatures -> one resolution
+        assert [r.record.extra["request_index"] for r in results] == list(range(5))
+        assert all(r.record.status == "ok" for r in results)
+        # all five shared one dispatch group
+        assert results[0].record.batch_size == 5

@@ -1,0 +1,141 @@
+"""Hypothesis property suite for the serving scheduler — the
+system-level invariants of serving/scheduler.py under randomized load
+(conservation, no starvation, budget admission, FIFO-within-class,
+virtual-clock determinism). Unit tests live in tests/test_scheduler.py;
+this module self-skips when hypothesis is absent (optional dep)."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.scheduler import (
+    PriorityClass,
+    RequestScheduler,
+    SchedulerConfig,
+)
+from repro.serving.simulator import ScenarioSpec, ServiceModel, SimConfig, simulate
+
+from test_scheduler import make_engine
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+_mix_entry = st.sampled_from(
+    [
+        ScenarioSpec(shape=(16, 16, 16), priority="interactive"),
+        ScenarioSpec(shape=(16, 16, 16), precision="bf16"),
+        ScenarioSpec(shape=(32, 32, 32), precision="int8w"),
+        ScenarioSpec(shape=(32, 32, 32)),
+        ScenarioSpec(shape=(32, 32, 32), mode="subvolume", priority="batch"),
+        ScenarioSpec(garbage=True),
+    ]
+)
+
+
+def _sim_cfg(seed, rate, depth, cap_mib, mix):
+    return SimConfig(
+        name="prop",
+        seed=seed,
+        horizon_s=60.0,
+        process="poisson",
+        process_kwargs={"rate_hz": rate},
+        mix=tuple(mix),
+        scheduler=SchedulerConfig(
+            max_queue_depth=depth,
+            admission_hbm_bytes=cap_mib * 1024 * 1024,
+            max_batch_requests=4,
+            native_shapes=True,
+            classes={
+                "interactive": PriorityClass("interactive", 0, deadline_s=5.0),
+                "standard": PriorityClass("standard", 1, deadline_s=20.0),
+                "batch": PriorityClass("batch", 2, deadline_s=None),
+            },
+        ),
+        service=ServiceModel(base_s=0.05, batch_overhead_s=0.02),
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rate=st.floats(0.5, 12.0),
+    depth=st.integers(2, 40),
+    cap_mib=st.integers(1, 64),
+    mix=st.lists(_mix_entry, min_size=1, max_size=4),
+)
+def test_conservation_and_no_starvation(seed, rate, depth, cap_mib, mix):
+    """Every admitted request reaches exactly one terminal state:
+    admitted == completed + demoted + rejected, and nothing is left
+    queued after drain — under ANY load, queue depth, and budget."""
+    engine = make_engine()
+    rep = simulate(engine, _sim_cfg(seed, rate, depth, cap_mib, mix))
+    st_ = rep.scheduler.stats
+    assert st_.conserved()
+    assert not rep.scheduler.queue  # no starvation: the queue fully drains
+    assert rep.arrived == rep.refused + st_.admitted
+    # every admitted request id has exactly one completion
+    ids = [c.id for c in rep.completions]
+    assert len(ids) == len(set(ids)) == st_.admitted
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rate=st.floats(2.0, 12.0),
+    cap_mib=st.integers(1, 8),
+)
+def test_admission_never_exceeds_budget(seed, rate, cap_mib):
+    """Sum of priced working sets in every dispatched batch <= the
+    configured admission budget (checked inside a wrapped run_batch)."""
+    engine = make_engine()
+    cfg = _sim_cfg(seed, rate, 40, cap_mib, [ScenarioSpec(), ScenarioSpec(shape=(32, 32, 32))])
+    cap = cfg.scheduler.admission_hbm_bytes
+    seen = []
+    orig = RequestScheduler.run_batch
+
+    def checking(self, batch, now=None):
+        seen.append(sum(r.bytes_priced for r in batch.requests))
+        return orig(self, batch, now)
+
+    RequestScheduler.run_batch = checking
+    try:
+        simulate(engine, cfg)
+    finally:
+        RequestScheduler.run_batch = orig
+    assert seen and all(total <= cap for total in seen)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), rate=st.floats(1.0, 10.0))
+def test_fifo_within_class_per_signature(seed, rate):
+    """Among served requests of one priority class sharing a resolved
+    signature, service starts in arrival order (continuous batching may
+    interleave *different* signatures, never reorder within one)."""
+    engine = make_engine()
+    rep = simulate(engine, _sim_cfg(seed, rate, 64, 64, [ScenarioSpec(), ScenarioSpec(precision="bf16")]))
+    starts: dict = {}
+    for c in rep.completions:
+        if c.outcome == "rejected":
+            continue
+        r = c.record
+        key = (r.priority_class, r.mode, r.executor, r.precision)
+        starts.setdefault(key, []).append((c.arrival_s, c.finish_s, c.id))
+    for group in starts.values():
+        by_arrival = sorted(group)
+        by_finish = sorted(group, key=lambda t: (t[1], t[2]))
+        assert [g[2] for g in by_arrival] == [g[2] for g in by_finish]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_virtual_clock_determinism(seed):
+    """Same seed -> byte-identical telemetry summary AND identical
+    per-request telemetry stream (the simulator's core promise)."""
+    cfg = _sim_cfg(seed, 6.0, 16, 2, [ScenarioSpec(), ScenarioSpec(shape=(32, 32, 32)), ScenarioSpec(garbage=True)])
+    engines = [make_engine(), make_engine()]
+    reps = [simulate(e, cfg) for e in engines]
+    assert reps[0].to_json() == reps[1].to_json()
+    streams = [
+        [r.to_json() for r in e.log.records] for e in engines
+    ]
+    assert streams[0] == streams[1]

@@ -228,6 +228,90 @@ class TestPipeline:
         assert budget.charge_subvolume(16, 8, cfg) > 0
 
 
+class TestServingFaults:
+    """Fault injection on the serving path (serving/scheduler.py): a bad
+    request inside a batch must fail ALONE, with a typed telemetry
+    record, while the rest of the batch completes — the serving-tier
+    version of the paper's 'telemetry over crashes' stance."""
+
+    def _engine(self):
+        from repro.serving.engine import SegmentationEngine
+
+        cfg = MeshNetConfig(dilations=(1, 2, 4), channels=5)
+        params = meshnet.init(KEY, cfg)
+        pc = PipelineConfig(
+            model=cfg, volume_shape=(16, 16, 16), cube=8, overlap=4,
+            min_component_size=4, executor="xla",
+        )
+        return SegmentationEngine(params, pc)
+
+    def _vols(self, n):
+        return [
+            mri.generate(
+                jax.random.PRNGKey(i), mri.SyntheticMRIConfig(shape=(16, 16, 16))
+            )[0]
+            for i in range(n)
+        ]
+
+    def test_executor_raising_mid_batch_fails_only_that_request(self, monkeypatch):
+        engine = self._engine()
+        vols = self._vols(3)
+        poison = vols[1]
+        real_run = pipeline.run
+
+        def flaky_run(cfg, params, vol, **kw):
+            if vol is poison:
+                raise RuntimeError("injected executor fault")
+            return real_run(cfg, params, vol, **kw)
+
+        monkeypatch.setattr(pipeline, "run", flaky_run)
+        results = engine.submit_many(vols)
+        assert [r.record.status for r in results] == ["ok", "fail", "ok"]
+        assert results[1].record.fail_type == "executor_error"
+        assert "injected executor fault" in results[1].record.extra["error"]
+        assert results[1].segmentation is None
+        for i in (0, 2):
+            assert results[i].segmentation.shape == (16, 16, 16)
+
+    def test_garbage_volume_in_batch_fails_typed(self):
+        engine = self._engine()
+        vols = self._vols(2)
+        batch = [vols[0], jnp.zeros((7,)), vols[1]]  # 1-D garbage mid-batch
+        results = engine.submit_many(batch)
+        assert [r.record.status for r in results] == ["ok", "fail", "ok"]
+        assert results[1].record.fail_type == "executor_error"
+        # the fleet ledger conserved: all three requests have records
+        assert len(engine.log.records) == 3
+
+    def test_geometry_failure_in_batch_is_isolated(self):
+        """A request pinning more slab devices than the host has fails
+        with the pipeline's typed shard_geometry record (never raises),
+        and its batch neighbours complete."""
+        if jax.device_count() > 2:
+            pytest.skip("needs a host with <= 2 devices to force the failure")
+        engine = self._engine()
+        vols = self._vols(2)
+        results = engine.submit_many(
+            [vols[0], vols[1]], devices=[None, 3],
+        )
+        assert results[0].record.status == "ok"
+        assert results[1].record.status == "fail"
+        assert results[1].record.fail_type == "shard_geometry"
+
+    def test_queue_full_backpressure_is_typed(self):
+        from repro.serving.scheduler import QueueFullError, SchedulerConfig
+
+        engine = self._engine()
+        engine.scheduler(SchedulerConfig(max_queue_depth=1))
+        engine.submit_async(self._vols(1)[0])
+        with pytest.raises(QueueFullError):
+            engine.submit_async(self._vols(1)[0])
+        comps = engine.drain()
+        assert len(comps) == 1 and comps[0].outcome == "completed"
+        # the refusal is in the fleet telemetry, typed
+        assert any(r.fail_type == "queue_full" for r in engine.log.records)
+
+
 class TestLosses:
     def test_dice_perfect_and_disjoint(self):
         a = jnp.ones((8, 8, 8), jnp.int32)
