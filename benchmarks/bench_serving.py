@@ -1,24 +1,27 @@
 """Serving-tier load benchmark: drive the continuous-batching scheduler
 through the three committed traffic scenarios on the deterministic
-virtual-clock simulator (src/repro/serving/simulator.py).
+virtual-clock simulator (src/repro/serving/simulator.py), and the
+replicated fleet (src/repro/serving/fleet.py) through the four committed
+fleet scenarios.
 
 Every number here is *virtual-clock*, derived from seeded arrivals and
 the modeled-bytes service model — two runs with the same seed are
-byte-identical on any machine, which is why the ``serving`` section of
-BENCH_2.json is gated ABSOLUTELY by benchmarks/check_regression.py (no
-machine normalization: these keys cannot drift with runner speed, only
-with scheduler behavior).
+byte-identical on any machine, which is why the ``serving`` and
+``serving_fleet`` sections of BENCH_2.json are gated ABSOLUTELY by
+benchmarks/check_regression.py (no machine normalization: these keys
+cannot drift with runner speed, only with scheduler/router behavior).
 
     PYTHONPATH=src python -m benchmarks.bench_serving --seed 0
     PYTHONPATH=src python -m benchmarks.bench_serving --scenario overload --json-out SUMMARY.json
+    PYTHONPATH=src python -m benchmarks.bench_serving --fleet           # fleet scenarios
     PYTHONPATH=src python -m benchmarks.bench_serving --soak 3600   # CI's virtual-hour soak
 
 ``--json-out`` writes the full per-scenario summaries (the golden-trace
-payloads); ``benchmarks.run serving`` consumes ``bench()`` for the
-BENCH_2.json rows. ``--soak H`` stretches the horizon to H virtual
-seconds and asserts conservation + shedding invariants instead of
-printing rows — the CI serving job runs a one-virtual-hour soak in about
-a minute of CPU.
+payloads); ``benchmarks.run serving`` / ``benchmarks.run serving_fleet``
+consume ``bench()`` / ``bench_fleet()`` for the BENCH_2.json rows.
+``--soak H`` stretches the horizon to H virtual seconds and asserts
+conservation + shedding invariants instead of printing rows — the CI
+serving job runs a one-virtual-hour soak in about a minute of CPU.
 """
 
 from __future__ import annotations
@@ -82,6 +85,60 @@ def bench(seed: int = 0) -> list:
     return rows
 
 
+def run_fleet_scenarios(scenarios, seed: int = 0, horizon_s=None):
+    """name -> summary dict for each requested fleet preset."""
+    from repro.serving import fleet as fl
+
+    out = {}
+    for name in scenarios:
+        rep = fl.simulate_fleet(fl.fleet_preset(name, seed=seed, horizon_s=horizon_s))
+        out[name] = rep.summary()
+    return out
+
+
+def bench_fleet(seed: int = 0) -> list:
+    """(name, us_per_call, hbm_bytes_modeled, note) rows for the gated
+    BENCH_2.json ``serving_fleet`` section — virtual-clock percentiles
+    per fleet scenario, plus the two acceptance keys the single-server
+    overload golden is compared against: the 4-replica fleet's
+    interactive p99 (must stay interactive-class) and its queue-full
+    refusal count (must stay strictly below the single server's 693,
+    carried in the us_per_call slot so growth is absolutely gated)."""
+    from repro.serving import fleet as fl
+
+    rows = []
+    summaries = run_fleet_scenarios(fl.FLEET_PRESETS, seed=seed)
+    for name, s in summaries.items():
+        lat = s["latency_ms"]
+        req = s["requests"]
+        aff = s["affinity"]
+        note = (
+            f"replicas={s['replicas']['created']}"
+            f";redispatched={req['redispatched']};refused={req['refused']}"
+            f";affinity_hit_rate={aff['hit_rate']}"
+        )
+        rows.append((f"serving_{name}_p50", lat["p50"] * 1e3, None, note))
+        rows.append((f"serving_{name}_p99", lat["p99"] * 1e3, None, note))
+    ov = summaries["fleet_overload"]
+    rows.append(
+        (
+            "serving_fleet_overload_p99_interactive",
+            ov["classes"]["interactive"]["latency_ms"]["p99"] * 1e3,
+            None,
+            "acceptance: < 5 virtual seconds on 4 replicas",
+        )
+    )
+    rows.append(
+        (
+            "serving_fleet_overload_refused",
+            float(ov["requests"]["refused"]),
+            None,
+            "acceptance: strictly below single-server overload (693)",
+        )
+    )
+    return rows
+
+
 def soak(horizon_s: float, seed: int = 0) -> int:
     """The CI soak: one long virtual window of the overload scenario.
     Asserts the hard serving invariants — conservation (zero lost
@@ -118,7 +175,14 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--scenario",
         action="append",
-        help="preset name (steady|burst|overload); repeatable; default all",
+        help="preset name (steady|burst|overload, or fleet_* with --fleet); "
+        "repeatable; default all",
+    )
+    ap.add_argument(
+        "--fleet",
+        action="store_true",
+        help="run the replicated-fleet presets (serving/fleet.py) instead "
+        "of the single-server ones",
     )
     ap.add_argument("--horizon", type=float, default=None, help="virtual seconds")
     ap.add_argument("--json-out", help="write the per-scenario summaries here")
@@ -133,6 +197,32 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.soak is not None:
         return soak(args.soak, seed=args.seed)
+
+    if args.fleet:
+        from repro.serving import fleet as fl
+
+        scenarios = args.scenario or list(fl.FLEET_PRESETS)
+        summaries = run_fleet_scenarios(
+            scenarios, seed=args.seed, horizon_s=args.horizon
+        )
+        print(
+            "scenario,arrived,refused,admitted,completed,demoted,rejected,"
+            "redispatched,replicas,affinity_hit_rate,p50_ms,p99_ms"
+        )
+        for name, s in summaries.items():
+            req = s["requests"]
+            print(
+                f"{name},{req['arrived']},{req['refused'] + req['no_replica']},"
+                f"{req['admitted']},{req['completed']},{req['demoted']},"
+                f"{sum(req['rejected'].values())},{req['redispatched']},"
+                f"{s['replicas']['created']},{s['affinity']['hit_rate']},"
+                f"{s['latency_ms']['p50']},{s['latency_ms']['p99']}"
+            )
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(summaries, f, indent=1, sort_keys=True)
+            print(f"wrote {args.json_out}")
+        return 0
 
     from repro.serving import simulator as sim
 

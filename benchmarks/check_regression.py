@@ -32,7 +32,7 @@ while fp32 rows keep their legacy un-suffixed names — so the per-key
 diff above always compares like-for-like precision (an int8w run can
 never mask an fp32 regression, and vice versa).
 
-Virtual sections (``serving``): these rows are *virtual-clock* numbers
+Virtual sections (``serving``, ``serving_fleet``): these rows are *virtual-clock* numbers
 from the deterministic load simulator — identical on any machine by
 construction — so they are (a) EXCLUDED from the machine-speed median
 (they would drag it toward 1.0 and make real timing keys fail on slow
@@ -62,7 +62,7 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
 #: sections whose us_per_call is virtual-clock (deterministic simulator
 #: output): excluded from machine normalization, gated absolutely.
-VIRTUAL_SECTIONS = frozenset({"serving"})
+VIRTUAL_SECTIONS = frozenset({"serving", "serving_fleet"})
 
 
 def _load(path: str) -> dict:
@@ -155,6 +155,21 @@ def compare(
                 "(scenario collapsed — nothing served?)"
             )
             verdicts.append("VIRTUAL-COLLAPSED")
+        elif (
+            key[0] in VIRTUAL_SECTIONS
+            and b["us_per_call"] == 0
+            and f["us_per_call"] > 0
+        ):
+            # a deterministic count/latency key at zero in the baseline
+            # (e.g. a fleet scenario's queue-full refusals) growing to
+            # nonzero is a real behavior regression — the relative gate
+            # below cannot see it (0 has no ratio), so gate it here
+            failures.append(
+                f"{key}: virtual us_per_call 0 -> {f['us_per_call']:.1f} "
+                "(deterministic key grew from zero — regenerate the "
+                "baseline if the change is intended)"
+            )
+            verdicts.append("VIRTUAL-REGRESSED")
         elif b["us_per_call"] > 0 and f["us_per_call"] > 0:
             if key[0] in VIRTUAL_SECTIONS:
                 # virtual-clock key: deterministic, so no machine factor —

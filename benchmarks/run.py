@@ -17,6 +17,11 @@ Sections:
                   load scenarios (steady / burst / overload) on the
                   deterministic serving simulator (bench_serving.py) —
                   bit-reproducible, gated absolutely (no machine norm)
+  [serving_fleet] virtual-clock p50/p99 of the four committed fleet
+                  scenarios (replicated schedulers + cache-affinity
+                  router, serving/fleet.py), plus the overload acceptance
+                  keys (interactive p99, queue-full refusals) — gated
+                  absolutely like [serving]
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -43,7 +48,7 @@ import sys
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
 #: sections emitting (name, us_per_call, hbm_bytes_modeled, note) rows.
-MEASURED_SECTIONS = ("kernels", "executors", "traffic", "serving")
+MEASURED_SECTIONS = ("kernels", "executors", "traffic", "serving", "serving_fleet")
 
 
 def _csv(name: str, us: float, hbm, derived: str = "") -> None:
@@ -99,6 +104,18 @@ def run_serving() -> list:
     print("\n[serving] name,us_per_call,hbm_bytes_modeled,derived")
     print("# virtual-clock latencies (deterministic discrete-event simulator,")
     print("# seed 0) — gated ABSOLUTELY by check_regression.py, no machine norm")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
+def run_serving_fleet() -> list:
+    from benchmarks import bench_serving
+
+    rows = bench_serving.bench_fleet()
+    print("\n[serving_fleet] name,us_per_call,hbm_bytes_modeled,derived")
+    print("# virtual-clock fleet latencies (replicated schedulers behind the")
+    print("# cache-affinity router, seed 0) — gated ABSOLUTELY, no machine norm")
     for name, us, hbm, note in rows:
         _csv(name, us, hbm, note)
     return rows
@@ -181,6 +198,7 @@ SECTIONS = {
     "executors": run_executors,
     "traffic": run_traffic,
     "serving": run_serving,
+    "serving_fleet": run_serving_fleet,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,

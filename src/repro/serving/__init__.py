@@ -1,7 +1,21 @@
 """Serving tier: engines (engine.py), the continuous-batching request
-scheduler (scheduler.py), and the deterministic load simulator
-(simulator.py). DESIGN.md §5."""
+scheduler (scheduler.py), the deterministic load simulator
+(simulator.py), and the replicated fleet behind a cache-affinity router
+(fleet.py). DESIGN.md §5-§6."""
 
+from repro.serving.fleet import (  # noqa: F401
+    FLEET_PRESETS,
+    ROUTER_POLICIES,
+    AutoscalerConfig,
+    Fleet,
+    FleetConfig,
+    FleetConfigError,
+    FleetEvent,
+    FleetServiceModel,
+    NoReplicaAvailable,
+    fleet_preset,
+    simulate_fleet,
+)
 from repro.serving.scheduler import (  # noqa: F401
     DEFAULT_CLASSES,
     PriorityClass,

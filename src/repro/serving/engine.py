@@ -24,7 +24,10 @@ registry's jit cache. The queued path — ``submit_async``/``drain``, and
 scheduler (serving/scheduler.py): bounded queue with typed
 ``QueueFullError`` backpressure, priority/deadline classes, HBM-priced
 admission with shed-to-subvolume demotion, and dynamic grouping of
-signature-compatible requests.
+signature-compatible requests. One engine == one fleet replica: the
+replicated serving tier (serving/fleet.py) builds N engines — each with
+its own jit caches and prepared weight pytrees — and routes across them
+by dispatch-signature cache affinity.
 
 LMEngine — continuous-batching text generation for any ModelConfig:
 chunked prefill (sequence patching, DESIGN.md §4), ring-buffer KV caches

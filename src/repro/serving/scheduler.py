@@ -159,6 +159,11 @@ class SchedulerStats:
     demoted: int = 0
     rejected: dict = dataclasses.field(default_factory=dict)
     refused: int = 0
+    # requests admitted here but handed BACK to the caller before service
+    # (fleet failover / drain re-dispatch, serving/fleet.py) — a fourth
+    # terminal state of THIS scheduler; the fleet ledger tracks where the
+    # request completed instead.
+    evacuated: int = 0
     batches: int = 0
     grouped_requests: int = 0
     resolutions: int = 0
@@ -168,7 +173,9 @@ class SchedulerStats:
         return sum(self.rejected.values())
 
     def conserved(self) -> bool:
-        return self.admitted == self.completed + self.demoted + self.rejected_total()
+        return self.admitted == (
+            self.completed + self.demoted + self.rejected_total() + self.evacuated
+        )
 
 
 @dataclasses.dataclass
@@ -247,16 +254,24 @@ class RequestScheduler:
         devices: Optional[int] = None,
         precision: Optional[str] = None,
         arrival_s: Optional[float] = None,
+        force: bool = False,
     ) -> int:
         """Enqueue one request; returns its id. Raises ``QueueFullError``
         at the depth limit (the refusal is counted and a typed telemetry
-        record is logged, so the fleet view sees shed load)."""
+        record is logged, so the fleet view sees shed load).
+
+        ``force=True`` bypasses the depth limit — the fleet router's
+        failover re-dispatch path (serving/fleet.py), where a request
+        already admitted by a crashed replica must land SOMEWHERE or the
+        exactly-once guarantee becomes at-most-once. The overshoot is
+        bounded by the dead replica's in-flight count."""
         now = self.clock.now() if arrival_s is None else float(arrival_s)
         cls = self.cfg.classes[priority]
         rid = self._seq
         self._seq += 1
         if (
-            self.cfg.max_queue_depth is not None
+            not force
+            and self.cfg.max_queue_depth is not None
             and len(self.queue) >= self.cfg.max_queue_depth
         ):
             self.stats.refused += 1
@@ -501,11 +516,42 @@ class RequestScheduler:
         member that *raises* (garbage volume, executor bug) gets a typed
         ``executor_error`` failure record while the rest of the group
         completes. Returns the batch finish time."""
+        t, unserved = self.run_batch_until(batch, None, now=now)
+        assert not unserved  # until=None serves every member
+        return t
+
+    def run_batch_until(
+        self, batch: Batch, until: Optional[float], now: Optional[float] = None
+    ) -> tuple[float, list]:
+        """``run_batch`` with a service horizon: serve members in order
+        while each would *finish* by ``until`` (virtual seconds), then
+        stop. Returns ``(finish_time, unserved_tail)`` — the tail members
+        were never executed, logged, or counted (exactly-once safety: the
+        fleet layer re-dispatches them after a replica crash, and they
+        must not have been served here first; the caller owns their
+        ``stats.evacuated`` accounting). ``until=None`` serves everything
+        (== ``run_batch``).
+
+        A finite ``until`` requires the modeled path (a service model and
+        ``execute=False``): truncation must *predict* each member's
+        duration before running it, and only the analytic models can —
+        measured execution would have to run the member to time it,
+        defeating the exactly-once point."""
+        if until is not None and (self.execute or self.service_model is None):
+            raise ValueError(
+                "run_batch_until with a finite horizon requires the "
+                "modeled path (execute=False and a service model)"
+            )
         start = batch.start_s if now is None else now
         t = start
         if self.service_model is not None:
             t += self.service_model.batch_overhead_s
-        for req in batch.requests:
+        for idx, req in enumerate(batch.requests):
+            if until is not None:
+                # preview the member's modeled duration WITHOUT serving it
+                preview = self._modeled_record(req)
+                if t + self.service_model.service_s(preview) > until:
+                    return t, list(batch.requests[idx:])
             result, rec = self._serve_one(req)
             if self.service_model is not None:
                 service = self.service_model.service_s(rec)
@@ -539,7 +585,45 @@ class RequestScheduler:
                 )
             )
             t = finish
-        return t
+        return t, []
+
+    def evacuate(self, now: Optional[float] = None) -> list:
+        """Hand every queued request back to the caller (fleet failover /
+        drain re-dispatch): the queue empties, each popped request counts
+        as ``evacuated`` in the conservation ledger — admitted here,
+        served elsewhere. Returns the requests in (arrival, id) order so
+        re-dispatch preserves FIFO fairness at the target replica."""
+        out = sorted(self.queue, key=lambda r: (r.arrival_s, r.id))
+        self.queue.clear()
+        self.stats.evacuated += len(out)
+        return out
+
+    def peek_signature(
+        self,
+        vol,
+        *,
+        mode: Optional[str] = None,
+        executor: Optional[str] = None,
+        devices: Optional[int] = None,
+        precision: Optional[str] = None,
+    ) -> tuple[Optional[GroupKey], int]:
+        """Resolve the admission signature + priced bytes a request WOULD
+        get, without enqueueing it — the fleet router's affinity key
+        (serving/fleet.py steers same-signature requests to replicas with
+        warm compiled executables). Shares the scheduler's resolution
+        cache, so peeking then submitting costs one resolution."""
+        probe = ServeRequest(
+            id=-1,
+            vol=vol,
+            priority_class=PriorityClass("peek", 0),
+            arrival_s=0.0,
+            deadline_s=None,
+            mode=mode,
+            executor=executor,
+            devices=devices,
+            precision=precision,
+        )
+        return self._resolve(probe)
 
     def _serve_one(self, req: ServeRequest):
         """(PipelineResult | None, TelemetryRecord) for one request —

@@ -377,9 +377,10 @@ def reference_engine():
 
 # ------------------------------------------------------- scenario presets ---
 
-#: heterogeneous mix exercised by every preset: two shapes, two storage
-#: policies, all three priority classes, and a garbage lane.
-_STANDARD_MIX = (
+#: heterogeneous mix exercised by every preset (single-server AND fleet,
+#: serving/fleet.py): two shapes, two storage policies, all three
+#: priority classes, and a garbage lane.
+STANDARD_MIX = (
     ScenarioSpec(shape=(16, 16, 16), priority="interactive", weight=3.0),
     ScenarioSpec(shape=(16, 16, 16), precision="bf16", priority="standard", weight=3.0),
     ScenarioSpec(shape=(32, 32, 32), precision="int8w", priority="standard", weight=2.0),
@@ -410,7 +411,7 @@ def preset(name: str, seed: int = 0, horizon_s: Optional[float] = None) -> SimCo
             horizon_s=horizon_s or 600.0,
             process="poisson",
             process_kwargs={"rate_hz": 0.5},
-            mix=_STANDARD_MIX,
+            mix=STANDARD_MIX,
             scheduler=SchedulerConfig(
                 max_queue_depth=64,
                 admission_hbm_bytes=512 * 1024 * 1024,
@@ -430,7 +431,7 @@ def preset(name: str, seed: int = 0, horizon_s: Optional[float] = None) -> SimCo
                 "period_s": 120.0,
                 "burst_len_s": 15.0,
             },
-            mix=_STANDARD_MIX,
+            mix=STANDARD_MIX,
             scheduler=SchedulerConfig(
                 max_queue_depth=64,
                 admission_hbm_bytes=512 * 1024 * 1024,
@@ -449,7 +450,7 @@ def preset(name: str, seed: int = 0, horizon_s: Optional[float] = None) -> SimCo
             # demotions — with conservation still exact.
             process="diurnal",
             process_kwargs={"peak_hz": 12.0},
-            mix=_STANDARD_MIX,
+            mix=STANDARD_MIX,
             scheduler=SchedulerConfig(
                 max_queue_depth=32,
                 # tight: a 32^3 fp32 streaming working set (~1.7 MiB) does

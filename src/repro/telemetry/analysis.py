@@ -222,6 +222,69 @@ def slo_attainment(records, slo_s: dict) -> dict:
     return out
 
 
+@dataclasses.dataclass
+class ReplicaSummary:
+    """Aggregate of one fleet replica over replica-stamped telemetry
+    (TelemetryRecord.replica_id, serving/fleet.py) — the per-server view
+    of the fleet rollup: how much each replica served, how well, and how
+    long its queue ran."""
+
+    replica_id: int
+    requests: int
+    served: int  # reached service on this replica (completed or demoted)
+    demoted: int
+    shed: dict  # typed pre-service rejections on this replica
+    ok_rate: float  # of served requests
+    p50_wait_s: float
+    p99_wait_s: float
+    mean_batch_size: float
+
+    def row(self) -> str:
+        return (
+            f"{self.replica_id},{self.requests},{self.served},{self.demoted},"
+            f"{sum(self.shed.values())},{self.ok_rate:.3f},"
+            f"{self.p50_wait_s:.4f},{self.p99_wait_s:.4f},{self.mean_batch_size:.2f}"
+        )
+
+
+def replica_summary(records) -> list[ReplicaSummary]:
+    """Per-replica queue/latency rollup over a fleet telemetry stream —
+    the horizontal cut ``class_summary`` doesn't see: a hot replica hides
+    inside healthy fleet-wide percentiles, but not inside its own row.
+    Records without a ``replica_id`` stamp (single-server or direct
+    pipeline runs) are skipped. Sorted by replica id for stable output."""
+    by: dict[int, list] = {}
+    for r in records:
+        if r.replica_id is not None:
+            by.setdefault(r.replica_id, []).append(r)
+    out = []
+    for rid in sorted(by):
+        rs = by[rid]
+        shed = {
+            t: sum(1 for r in rs if r.fail_type == t)
+            for t in SHED_TYPES
+            if any(r.fail_type == t for r in rs)
+        }
+        served = [r for r in rs if r.fail_type not in SHED_TYPES]
+        waits = [r.queue_wait_s for r in served if r.queue_wait_s is not None]
+        batches = [r.batch_size for r in served if r.batch_size is not None]
+        out.append(
+            ReplicaSummary(
+                replica_id=rid,
+                requests=len(rs),
+                served=len(served),
+                demoted=sum(1 for r in served if r.demoted),
+                shed=shed,
+                ok_rate=sum(1 for r in served if r.status == "ok")
+                / max(len(served), 1),
+                p50_wait_s=nearest_rank(waits, 50),
+                p99_wait_s=nearest_rank(waits, 99),
+                mean_batch_size=float(np.mean(batches)) if batches else 0.0,
+            )
+        )
+    return out
+
+
 def precision_summary(records) -> list[PrecisionSummary]:
     """Per-(executor, precision) traffic/footprint aggregates over a
     telemetry log — the fleet view of the precision policy: which backend

@@ -82,6 +82,11 @@ class TelemetryRecord:
     # True when HBM-budget admission shed the request to the sub-volume
     # failsafe (the paper's patching intervention, applied as backpressure)
     demoted: bool = False
+    # which fleet replica served (or shed) the request — stamped by the
+    # fleet layer (serving/fleet.py); None outside fleet serving. A
+    # request re-dispatched after a replica crash carries the replica
+    # that finally SERVED it, never the one that lost it.
+    replica_id: Optional[int] = None
     extra: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:

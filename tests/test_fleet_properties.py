@@ -1,0 +1,275 @@
+"""Property suite for the replicated serving fleet (serving/fleet.py) —
+the invariants that make N schedulers behind a router trustworthy:
+
+  * **fleet conservation**: summed over replicas (crashes and drains
+    included), admitted == completed + demoted + rejected + evacuated,
+    and every arrival has exactly one terminal ledger outcome;
+  * **exactly-once**: after failover re-dispatch no request is ever
+    served twice (``completions_seen <= 1`` on every ledger entry);
+  * **router hygiene**: no policy ever routes to a draining or dead
+    replica — cache affinity included, however warm the dying replica's
+    jit caches are;
+  * **determinism**: same seed -> byte-identical fleet summaries, across
+    replica counts, policies, and mid-trace crash events.
+
+Same double-drive structure as tests/test_scheduler_properties.py: each
+``_check_*`` body runs under hypothesis when it is importable (CI) AND
+under an always-on deterministic grid (bare installs never skip)."""
+
+import pytest
+
+from repro.serving.fleet import (
+    Fleet,
+    FleetConfig,
+    FleetEvent,
+    FleetServiceModel,
+    ROUTER_POLICIES,
+    fleet_preset,
+    simulate_fleet,
+)
+from repro.serving.scheduler import PriorityClass, SchedulerConfig
+from repro.serving.simulator import STANDARD_MIX
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: the grid fallback below still runs
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _fleet_cfg(seed, rate, replicas, policy, crash_t=None, depth=16):
+    events = ()
+    if crash_t is not None and replicas > 1:
+        # crash a middle replica mid-trace; survivors absorb the backlog
+        events = (FleetEvent(t=crash_t, action="crash", replica=replicas // 2),)
+    return FleetConfig(
+        name="prop",
+        seed=seed,
+        horizon_s=60.0,
+        process="poisson",
+        process_kwargs={"rate_hz": rate},
+        mix=STANDARD_MIX,
+        replicas=replicas,
+        policy=policy,
+        scheduler=SchedulerConfig(
+            max_queue_depth=depth,
+            admission_hbm_bytes=4 * 1024 * 1024,
+            max_batch_requests=4,
+            native_shapes=True,
+            classes={
+                "interactive": PriorityClass("interactive", 0, deadline_s=5.0),
+                "standard": PriorityClass("standard", 1, deadline_s=20.0),
+                "batch": PriorityClass("batch", 2, deadline_s=None),
+            },
+        ),
+        service=FleetServiceModel(base_s=0.05, batch_overhead_s=0.02),
+        events=events,
+    )
+
+
+# ------------------------------------------------------ invariant bodies ---
+
+
+def _check_fleet_conservation(seed, rate, replicas, policy, crash_t):
+    """Admitted == completed + demoted + rejected + evacuated on every
+    replica; every arrival reaches exactly one terminal outcome in the
+    fleet ledger; queues fully drain — with or without a crash."""
+    rep = simulate_fleet(_fleet_cfg(seed, rate, replicas, policy, crash_t))
+    fl = rep.fleet
+    assert fl.conserved()
+    for r in fl.replicas:
+        st_ = r.sched.stats
+        assert st_.conserved(), f"replica {r.id}: {st_}"
+        assert not r.sched.queue or r.crashed is False  # crashed queues evacuated
+        if r.crashed:
+            assert not r.sched.queue, "crashed replica retained queued work"
+    s = rep.summary()
+    req = s["requests"]
+    unique_terminal = (
+        req["refused"]
+        + req["no_replica"]
+        + req["completed"]
+        + req["demoted"]
+        + sum(req["rejected"].values())
+    )
+    assert req["arrived"] == unique_terminal
+    # per-replica admissions exceed unique admissions by exactly the
+    # re-dispatches (each re-dispatch re-admits one request)
+    assert req["admitted"] == (
+        req["arrived"] - req["refused"] - req["no_replica"] + req["redispatched"]
+    )
+
+
+def _check_no_request_served_twice(seed, rate, replicas, crash_t):
+    """Exactly-once under failover: a crash mid-trace re-dispatches work,
+    and no ledger entry ever sees a second completion."""
+    rep = simulate_fleet(_fleet_cfg(seed, rate, replicas, "cache_affinity", crash_t))
+    fl = rep.fleet
+    assert all(e.completions_seen <= 1 for e in fl.ledger)
+    served = [e for e in fl.ledger if e.outcome in ("completed", "demoted")]
+    assert all(e.completions_seen == 1 for e in served)
+    # the ledger's served set and the replicas' completion sets agree
+    by_outcome = sum(
+        r.sched.stats.completed + r.sched.stats.demoted for r in fl.replicas
+    )
+    assert len(served) == by_outcome
+
+
+def _check_router_avoids_draining(seed, rate, replicas, policy):
+    """No routing decision — any policy — ever lands on a draining or
+    dead replica, even while its warm jit caches make it the affinity
+    favourite. Instrumented at the router itself."""
+    cfg = _fleet_cfg(seed, rate, replicas, policy)
+    # drain one replica mid-trace (graceful flavour of the crash event)
+    cfg = FleetConfig(
+        **{
+            **cfg.__dict__,
+            "events": (FleetEvent(t=20.0, action="drain", replica=0),),
+        }
+    )
+    chosen = []
+    orig = Fleet._pick
+
+    def recording(self, *a, **kw):
+        r = orig(self, *a, **kw)
+        chosen.append((r.id, r.draining, r.crashed))
+        return r
+
+    Fleet._pick = recording
+    try:
+        rep = simulate_fleet(cfg)
+    finally:
+        Fleet._pick = orig
+    assert chosen, "router never exercised"
+    assert all(not draining and not crashed for _, draining, crashed in chosen)
+    # the drained replica really left the routable set
+    assert rep.summary()["replicas"]["drained"] == 1
+
+
+def _check_fleet_determinism(seed, replicas, policy, crash_t):
+    """Same seed -> byte-identical fleet summaries (the golden-trace
+    foundation), including failover timelines."""
+    runs = [
+        simulate_fleet(_fleet_cfg(seed, 6.0, replicas, policy, crash_t)).to_json()
+        for _ in range(2)
+    ]
+    assert runs[0] == runs[1]
+
+
+def test_replica_summary_rollup():
+    """Fleet telemetry is replica-stamped, and the per-replica rollup in
+    telemetry/analysis.py reconstructs each replica's ledger from the
+    record stream alone — the horizontal cut class_summary can't see."""
+    from repro.telemetry.analysis import replica_summary
+
+    rep = simulate_fleet(_fleet_cfg(0, 6.0, 3, "cache_affinity", 25.0))
+    fl = rep.fleet
+    records = [r for repl in fl.replicas for r in repl.sched.engine.log.records]
+    rows = replica_summary(records)
+    by_id = {r.replica_id: r for r in rows}
+    for repl in fl.replicas:
+        st_ = repl.sched.stats
+        terminal = st_.completed + st_.demoted + st_.rejected_total()
+        if terminal == 0:
+            assert repl.id not in by_id
+            continue
+        row = by_id[repl.id]
+        assert row.served == st_.completed + st_.demoted
+        assert row.demoted == st_.demoted
+        assert sum(row.shed.values()) == st_.rejected_total()
+    # re-dispatched requests are stamped with the replica that SERVED
+    # them, so summed served equals the ledger's unique served count
+    served_ledger = sum(
+        1 for e in fl.ledger if e.outcome in ("completed", "demoted")
+    )
+    assert sum(r.served for r in rows) == served_ledger
+
+
+# ------------------------------------------------- hypothesis exploration ---
+
+if HAVE_HYPOTHESIS:
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(1.0, 10.0),
+        replicas=st.integers(1, 5),
+        policy=st.sampled_from(ROUTER_POLICIES),
+        crash_t=st.one_of(st.none(), st.floats(5.0, 50.0)),
+    )
+    def test_fleet_conservation(seed, rate, replicas, policy, crash_t):
+        _check_fleet_conservation(seed, rate, replicas, policy, crash_t)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(4.0, 12.0),
+        replicas=st.integers(2, 5),
+        crash_t=st.floats(5.0, 50.0),
+    )
+    def test_no_request_served_twice(seed, rate, replicas, crash_t):
+        _check_no_request_served_twice(seed, rate, replicas, crash_t)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(1.0, 8.0),
+        replicas=st.integers(2, 5),
+        policy=st.sampled_from(ROUTER_POLICIES),
+    )
+    def test_router_avoids_draining(seed, rate, replicas, policy):
+        _check_router_avoids_draining(seed, rate, replicas, policy)
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        replicas=st.integers(1, 4),
+        policy=st.sampled_from(ROUTER_POLICIES),
+        crash_t=st.one_of(st.none(), st.floats(10.0, 40.0)),
+    )
+    def test_fleet_determinism(seed, replicas, policy, crash_t):
+        _check_fleet_determinism(seed, replicas, policy, crash_t)
+
+
+# ------------------------------------------------- deterministic fallback ---
+
+
+class TestGridFallback:
+    """Pinned corners of the fleet property space — always executed, with
+    or without hypothesis, so no environment silently skips the fleet
+    invariants."""
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,policy,crash_t",
+        [
+            (0, 2.0, 1, "round_robin", None),
+            (1, 8.0, 3, "cache_affinity", 25.0),
+            (2, 6.0, 4, "least_loaded", None),
+            (3, 10.0, 5, "join_shortest_queue", 12.0),
+        ],
+    )
+    def test_fleet_conservation(self, seed, rate, replicas, policy, crash_t):
+        _check_fleet_conservation(seed, rate, replicas, policy, crash_t)
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,crash_t", [(0, 8.0, 3, 20.0), (1, 12.0, 2, 35.0)]
+    )
+    def test_no_request_served_twice(self, seed, rate, replicas, crash_t):
+        _check_no_request_served_twice(seed, rate, replicas, crash_t)
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,policy",
+        [(0, 4.0, 2, "cache_affinity"), (1, 6.0, 4, "round_robin")],
+    )
+    def test_router_avoids_draining(self, seed, rate, replicas, policy):
+        _check_router_avoids_draining(seed, rate, replicas, policy)
+
+    @pytest.mark.parametrize(
+        "seed,replicas,policy,crash_t",
+        [(0, 3, "cache_affinity", 20.0), (5, 2, "join_shortest_queue", None)],
+    )
+    def test_fleet_determinism(self, seed, replicas, policy, crash_t):
+        _check_fleet_determinism(seed, replicas, policy, crash_t)

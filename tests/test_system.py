@@ -312,6 +312,108 @@ class TestServingFaults:
         assert any(r.fail_type == "queue_full" for r in engine.log.records)
 
 
+class TestFleetFaults:
+    """Fault injection on the replicated fleet (serving/fleet.py): a
+    raising replica must isolate to its own dispatch group, an
+    all-draining router must refuse with a TYPED error, and
+    scale-to-zero must be rejected at configuration time — the fleet
+    tier's version of 'telemetry over crashes'."""
+
+    def _engine(self):
+        from repro.serving.engine import SegmentationEngine
+
+        cfg = MeshNetConfig(dilations=(1, 2, 4), channels=5)
+        params = meshnet.init(KEY, cfg)
+        pc = PipelineConfig(
+            model=cfg, volume_shape=(16, 16, 16), cube=8, overlap=4,
+            min_component_size=4, executor="xla",
+        )
+        return SegmentationEngine(params, pc)
+
+    def _fleet(self, replicas=2, execute=False, **cfg_kwargs):
+        from repro.serving.fleet import Fleet, FleetConfig
+
+        return Fleet(
+            FleetConfig(replicas=replicas, execute=execute, **cfg_kwargs),
+            engine_factory=self._engine,
+        )
+
+    def test_replica_raising_mid_batch_isolates_to_that_replica(self, monkeypatch):
+        """An executor fault on one replica fails ONE request with a
+        typed record; its group neighbours and the other replica's
+        requests complete — and the fleet ledger still conserves."""
+        fleet = self._fleet(replicas=2, execute=True, policy="round_robin")
+        vols = [
+            mri.generate(
+                jax.random.PRNGKey(i), mri.SyntheticMRIConfig(shape=(16, 16, 16))
+            )[0]
+            for i in range(4)
+        ]
+        poison = vols[1]
+        real_run = pipeline.run
+
+        def flaky_run(cfg, params, vol, **kw):
+            if vol is poison:
+                raise RuntimeError("injected replica fault")
+            return real_run(cfg, params, vol, **kw)
+
+        monkeypatch.setattr(pipeline, "run", flaky_run)
+        for v in vols:
+            fleet.submit(v)
+        fleet.drain()
+        assert fleet.conserved()
+        served = sorted(
+            (e for e in fleet.ledger), key=lambda e: e.fid
+        )
+        records = [e.completion.record for e in served]
+        assert [r.status for r in records] == ["ok", "fail", "ok", "ok"]
+        assert records[1].fail_type == "executor_error"
+        assert "injected replica fault" in records[1].extra["error"]
+        # the fault stayed on the replica that served it; both replicas
+        # still completed their groups
+        assert {r.replica_id for r in records} == {0, 1}
+
+    def test_router_with_all_replicas_draining_refuses_typed(self):
+        from repro.serving.fleet import NoReplicaAvailable
+
+        fleet = self._fleet(replicas=2)
+        fleet.drain_replica(0)
+        fleet.drain_replica(1)
+        with pytest.raises(NoReplicaAvailable) as ei:
+            fleet.submit(np.zeros((16, 16, 16), np.float32))
+        assert ei.value.total == 2
+        assert ei.value.draining == 2
+        assert ei.value.crashed == 0
+        # the refusal is ledgered as a typed terminal outcome
+        assert fleet.ledger[-1].outcome == "no_replica"
+        assert fleet.no_replica == 1
+
+    def test_autoscaler_scale_to_zero_rejected_typed(self):
+        from repro.serving.fleet import (
+            AutoscalerConfig,
+            Fleet,
+            FleetConfig,
+            FleetConfigError,
+        )
+
+        # at configuration time: a floor below one replica is an outage
+        with pytest.raises(FleetConfigError, match="min_replicas"):
+            Fleet(
+                FleetConfig(
+                    replicas=1,
+                    autoscaler=AutoscalerConfig(min_replicas=0),
+                ),
+                engine_factory=self._engine,
+            )
+        with pytest.raises(FleetConfigError, match=">= 1 replica"):
+            Fleet(FleetConfig(replicas=0), engine_factory=self._engine)
+        # at runtime: draining the last routable replica is refused
+        fleet = self._fleet(replicas=1)
+        with pytest.raises(FleetConfigError, match="scale-to-zero"):
+            fleet.scale_down()
+        assert fleet.replicas[0].routable  # refusal left the fleet intact
+
+
 class TestLosses:
     def test_dice_perfect_and_disjoint(self):
         a = jnp.ones((8, 8, 8), jnp.int32)
