@@ -1,8 +1,10 @@
 """Serving-tier load benchmark: drive the continuous-batching scheduler
 through the three committed traffic scenarios on the deterministic
 virtual-clock simulator (src/repro/serving/simulator.py), and the
-replicated fleet (src/repro/serving/fleet.py) through the four committed
-fleet scenarios.
+replicated fleet (src/repro/serving/fleet.py) through the five committed
+fleet scenarios (the fifth, ``fleet_faultstorm``, runs the seeded fault
+storm under the full resilience policy and also feeds the gated
+``serving_resilience`` BENCH section via ``bench_resilience()``).
 
 Every number here is *virtual-clock*, derived from seeded arrivals and
 the modeled-bytes service model — two runs with the same seed are
@@ -139,13 +141,100 @@ def bench_fleet(seed: int = 0) -> list:
     return rows
 
 
-def soak(horizon_s: float, seed: int = 0) -> int:
+def bench_resilience(seed: int = 0) -> list:
+    """(name, us_per_call, hbm_bytes_modeled, note) rows for the gated
+    BENCH_2.json ``serving_resilience`` section — the fault-storm
+    acceptance scenario reduced to deterministic virtual-clock keys where
+    GROWTH means the resilience layer got worse (check_regression gates
+    virtual sections on growth only, so every key here is
+    lower-is-better): unrecovered retryable faults, timeout reaps,
+    lost/double-served requests (must stay 0), and the storm's e2e
+    latency tail. Hedge/breaker activity rides in the notes column."""
+    s = run_fleet_scenarios(["fleet_faultstorm"], seed=seed)["fleet_faultstorm"]
+    req = s["requests"]
+    r = s["resilience"]
+    lost = req["arrived"] - (
+        req["refused"] + req["no_replica"] + req["completed"]
+        + req["demoted"] + sum(req["rejected"].values())
+    )
+    note = (
+        f"retries={r['retries']};hedges={r['hedges']}"
+        f";hedge_wins={r['hedge_wins']}"
+        f";breaker_trips={r['breaker']['trips']}"
+        f";recovery_rate={r['recovery_rate']}"
+    )
+    return [
+        (
+            "resilience_faultstorm_unrecovered",
+            float(r["faulted_requests"] - r["recovered_requests"]),
+            None,
+            note,
+        ),
+        (
+            "resilience_faultstorm_timeouts",
+            float(r["faults"]["timeout"]),
+            None,
+            "stuck members reaped at the class bound",
+        ),
+        (
+            "resilience_faultstorm_lost",
+            float(lost),
+            None,
+            "acceptance: zero lost requests",
+        ),
+        (
+            "resilience_faultstorm_double_served",
+            float(req["served_twice"]),
+            None,
+            "acceptance: zero double-serves (hedge races included)",
+        ),
+        (
+            "resilience_faultstorm_p99",
+            s["latency_ms"]["p99"] * 1e3,
+            None,
+            note,
+        ),
+    ]
+
+
+def soak(horizon_s: float, seed: int = 0, fault_rate: float = 0.0) -> int:
     """The CI soak: one long virtual window of the overload scenario.
     Asserts the hard serving invariants — conservation (zero lost
     requests), typed shedding under overload, and a priority-protected
-    interactive tail — and prints the summary. Returns a process exit
-    code."""
-    s = run_scenarios(["overload"], seed=seed, horizon_s=horizon_s)["overload"]
+    interactive tail — and prints the summary. With ``--fault-rate`` the
+    same window runs under a transient fault storm at that per-attempt
+    rate plus the full resilience policy, and the JSON summary carries
+    the retry/breaker counters (the ``resilience`` block). Returns a
+    process exit code."""
+    if fault_rate > 0.0:
+        import dataclasses
+
+        from repro.serving import simulator as sim
+        from repro.serving.resilience import (
+            BreakerConfig,
+            FaultPlan,
+            FaultRule,
+            ResiliencePolicy,
+            RetryPolicy,
+        )
+
+        cfg = dataclasses.replace(
+            sim.preset("overload", seed=seed, horizon_s=horizon_s),
+            resilience=ResiliencePolicy(
+                retry=RetryPolicy(max_attempts=3, backoff_base_s=0.1,
+                                  seed=seed),
+                service_timeout_s={"interactive": 4.0, "standard": 8.0,
+                                   "batch": 20.0},
+                breaker=BreakerConfig(trip_after=3, cooldown_s=120.0),
+            ),
+            fault_plan=FaultPlan(
+                seed=seed,
+                rules=(FaultRule(kind="transient", rate=fault_rate),),
+            ),
+        )
+        s = sim.simulate(_engine(), cfg).summary()
+    else:
+        s = run_scenarios(["overload"], seed=seed, horizon_s=horizon_s)["overload"]
     print(json.dumps(s, indent=1, sort_keys=True))
     req = s["requests"]
     ok = True
@@ -163,9 +252,30 @@ def soak(horizon_s: float, seed: int = 0) -> int:
     if inter and inter["queue_wait_ms"]["p99"] > 5_000.0:
         print("SOAK FAIL: interactive p99 wait above 5 s", file=sys.stderr)
         ok = False
+    res = s.get("resilience")
+    if fault_rate > 0.0:
+        if res is None:
+            print("SOAK FAIL: fault storm ran without a resilience block",
+                  file=sys.stderr)
+            ok = False
+        elif res["faulted_requests"] > 0 and res["recovery_rate"] < 0.9:
+            print(
+                f"SOAK FAIL: recovery rate {res['recovery_rate']} < 0.9 "
+                f"under fault rate {fault_rate}",
+                file=sys.stderr,
+            )
+            ok = False
+    tail = ""
+    if res is not None:
+        tail = (
+            f" retries={res['retries']} "
+            f"faulted={res['faulted_requests']} "
+            f"recovery_rate={res['recovery_rate']}"
+        )
     print(f"\nsoak {'OK' if ok else 'FAILED'}: horizon={s['horizon_s']}s "
           f"arrived={req['arrived']} shed={shed} "
-          f"interactive_p99_wait_ms={inter['queue_wait_ms']['p99'] if inter else '-'}")
+          f"interactive_p99_wait_ms={inter['queue_wait_ms']['p99'] if inter else '-'}"
+          + tail)
     return 0 if ok else 1
 
 
@@ -194,9 +304,18 @@ def main(argv=None) -> int:
         help="run the overload soak for this many VIRTUAL seconds and "
         "assert serving invariants (CI uses 3600 — one virtual hour)",
     )
+    ap.add_argument(
+        "--fault-rate",
+        type=float,
+        default=0.0,
+        metavar="RATE",
+        help="with --soak: inject transient faults at this per-attempt "
+        "rate under the full resilience policy; the JSON summary then "
+        "carries the retry/breaker counters and recovery rate",
+    )
     args = ap.parse_args(argv)
     if args.soak is not None:
-        return soak(args.soak, seed=args.seed)
+        return soak(args.soak, seed=args.seed, fault_rate=args.fault_rate)
 
     if args.fleet:
         from repro.serving import fleet as fl

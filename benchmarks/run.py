@@ -17,11 +17,15 @@ Sections:
                   load scenarios (steady / burst / overload) on the
                   deterministic serving simulator (bench_serving.py) —
                   bit-reproducible, gated absolutely (no machine norm)
-  [serving_fleet] virtual-clock p50/p99 of the four committed fleet
+  [serving_fleet] virtual-clock p50/p99 of the five committed fleet
                   scenarios (replicated schedulers + cache-affinity
                   router, serving/fleet.py), plus the overload acceptance
                   keys (interactive p99, queue-full refusals) — gated
                   absolutely like [serving]
+  [serving_resilience] lower-is-better virtual keys of the fault-storm
+                  acceptance scenario (serving/resilience.py): unrecovered
+                  faults, timeout reaps, lost/double-served (must stay 0),
+                  and the storm's p99 — gated absolutely like [serving]
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -48,7 +52,14 @@ import sys
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
 #: sections emitting (name, us_per_call, hbm_bytes_modeled, note) rows.
-MEASURED_SECTIONS = ("kernels", "executors", "traffic", "serving", "serving_fleet")
+MEASURED_SECTIONS = (
+    "kernels",
+    "executors",
+    "traffic",
+    "serving",
+    "serving_fleet",
+    "serving_resilience",
+)
 
 
 def _csv(name: str, us: float, hbm, derived: str = "") -> None:
@@ -116,6 +127,19 @@ def run_serving_fleet() -> list:
     print("\n[serving_fleet] name,us_per_call,hbm_bytes_modeled,derived")
     print("# virtual-clock fleet latencies (replicated schedulers behind the")
     print("# cache-affinity router, seed 0) — gated ABSOLUTELY, no machine norm")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
+def run_serving_resilience() -> list:
+    from benchmarks import bench_serving
+
+    rows = bench_serving.bench_resilience()
+    print("\n[serving_resilience] name,us_per_call,hbm_bytes_modeled,derived")
+    print("# fault-storm acceptance keys (seed 0): every key is lower-is-")
+    print("# better virtual-clock, gated ABSOLUTELY — growth means the")
+    print("# resilience layer recovers less, reaps later, or loses requests")
     for name, us, hbm, note in rows:
         _csv(name, us, hbm, note)
     return rows
@@ -199,6 +223,7 @@ SECTIONS = {
     "traffic": run_traffic,
     "serving": run_serving,
     "serving_fleet": run_serving_fleet,
+    "serving_resilience": run_serving_resilience,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,

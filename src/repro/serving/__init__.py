@@ -1,25 +1,52 @@
 """Serving tier: engines (engine.py), the continuous-batching request
 scheduler (scheduler.py), the deterministic load simulator
-(simulator.py), and the replicated fleet behind a cache-affinity router
-(fleet.py). DESIGN.md §5-§6."""
+(simulator.py), the replicated fleet behind a cache-affinity router
+(fleet.py), and the resilience layer — typed faults, retry/backoff,
+timeouts, hedging, and the executor degradation ladder (errors.py,
+resilience.py). DESIGN.md §5-§7."""
 
+from repro.serving.errors import (  # noqa: F401
+    EXECUTION_FAULT_TYPES,
+    PERMANENT_FAULT,
+    RETRYABLE_FAIL_TYPES,
+    SERVICE_TIMEOUT,
+    TRANSIENT_FAULT,
+    ExecutorFault,
+    FleetConfigError,
+    NoReplicaAvailable,
+    PermanentExecutorError,
+    QueueFullError,
+    ResilienceConfigError,
+    ServingError,
+    TransientExecutorError,
+    classify,
+)
 from repro.serving.fleet import (  # noqa: F401
     FLEET_PRESETS,
     ROUTER_POLICIES,
     AutoscalerConfig,
     Fleet,
     FleetConfig,
-    FleetConfigError,
     FleetEvent,
     FleetServiceModel,
-    NoReplicaAvailable,
     fleet_preset,
     simulate_fleet,
+)
+from repro.serving.resilience import (  # noqa: F401
+    FAULT_KINDS,
+    LADDER,
+    BreakerConfig,
+    FaultPlan,
+    FaultRule,
+    HedgePolicy,
+    ResiliencePolicy,
+    RetryPolicy,
+    SignatureBreaker,
+    demote_rung,
 )
 from repro.serving.scheduler import (  # noqa: F401
     DEFAULT_CLASSES,
     PriorityClass,
-    QueueFullError,
     RequestScheduler,
     SchedulerConfig,
 )

@@ -466,8 +466,10 @@ class SegmentationEngine:
         ``jitted_apply`` cache, one mesh via the slab-count mesh cache,
         and one prepared weight pytree per policy via the engine's
         cache. A request that *raises* (garbage volume, executor bug)
-        yields a failed result with ``fail_type="executor_error"`` while
-        the rest of its group completes. Each telemetry record carries
+        yields a failed result typed by the fault taxonomy
+        (serving/errors.py — ``transient_fault`` for declared-retryable
+        executor errors, ``permanent_fault`` otherwise) while the rest
+        of its group completes. Each telemetry record carries
         the mode/executor/precision that served it, the scheduler's
         queue/batch stamps, and the request's submission index in
         ``extra``.

@@ -1,0 +1,132 @@
+"""Typed fault taxonomy for the serving tier — one module, every error.
+
+Brainchop survives a hostile runtime (the browser) by *naming* its
+failures — "Unable to create WebGL Texture", sub-volume failsafes — and
+CHIPS (PAPERS.md, arXiv:1710.00734) treats transient worker failures,
+stragglers, and stuck jobs as the steady state of a cloud medical-image
+service, not an exception path. The serving stack follows suit: every
+error a scheduler, router, or executor can raise is a *typed* class
+defined (or re-exported) here, and execution faults are split along the
+one axis that changes scheduling policy — **can a retry help?**
+
+  * ``TransientExecutorError`` — the fault is expected to clear on its
+    own (preemption, OOM race, a flaky device, an interrupted DMA): the
+    retry/backoff machinery in ``serving/resilience.py`` re-enqueues the
+    request in its signature lane with the ORIGINAL arrival stamp.
+  * ``PermanentExecutorError`` — retrying the same signature on the same
+    rung reproduces the fault (a miscompiled executable, a poisoned
+    weight cache, an unsupported shape): no retry; the circuit breaker
+    demotes the signature's executor down the degradation ladder so
+    later requests complete at a slower rung instead of failing.
+
+``classify`` maps an arbitrary raised exception onto that axis (default
+conservative: unknown exceptions are permanent — retrying an unknown
+fault burns capacity exactly when the service is least healthy). The
+scheduler's ``_serve_one`` stamps the result as the record's
+``fail_type`` (``transient_fault`` | ``permanent_fault``), replacing the
+blanket ``executor_error`` of PR 5.
+
+Pre-service backpressure and configuration errors are re-exported from
+their defining modules (or defined here when serving-owned) so call
+sites import ONE module instead of spelunking the package. DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+# Typed errors owned by other layers, re-exported for one-stop imports:
+# the sharded executor family's geometry failures and the memory-budget
+# model's admission failures both cross the serving boundary.
+from repro.core.spatial_shard import ShardGeometryError  # noqa: F401
+from repro.telemetry.budget import BudgetExceeded  # noqa: F401
+
+
+class ServingError(Exception):
+    """Base class of every serving-owned typed error."""
+
+
+# --------------------------------------------------------- executor faults ---
+
+
+class ExecutorFault(ServingError):
+    """Base of the execution-fault taxonomy: a request reached service
+    and the executor raised. Subclasses pick the retry policy."""
+
+
+class TransientExecutorError(ExecutorFault):
+    """A fault expected to clear on retry: device preemption, an HBM
+    allocation race, an interrupted halo exchange. The retry policy
+    (``serving/resilience.py``) backs off and re-enqueues."""
+
+
+class PermanentExecutorError(ExecutorFault):
+    """A fault that will reproduce on the same (executor, signature)
+    rung: retrying is wasted work, but the circuit breaker can demote
+    the signature one rung down the degradation ladder."""
+
+
+#: fail_type stamps of the execution-fault taxonomy (TelemetryRecord).
+TRANSIENT_FAULT = "transient_fault"
+PERMANENT_FAULT = "permanent_fault"
+#: a batch member cancelled by its priority class's service timeout —
+#: scheduled like a transient fault (stuck-forever jobs are the CHIPS
+#: straggler pathology; a retry lands on a healthy attempt).
+SERVICE_TIMEOUT = "service_timeout"
+
+#: fail types the retry policy treats as retryable.
+RETRYABLE_FAIL_TYPES = frozenset({TRANSIENT_FAULT, SERVICE_TIMEOUT})
+#: every execution-fault fail_type the resilience layer emits.
+EXECUTION_FAULT_TYPES = frozenset(
+    {TRANSIENT_FAULT, PERMANENT_FAULT, SERVICE_TIMEOUT}
+)
+
+
+def classify(exc: BaseException) -> str:
+    """Map a raised exception to its ``fail_type`` stamp. Explicitly
+    transient errors are ``transient_fault``; everything else —
+    PermanentExecutorError, garbage-volume ValueErrors, geometry
+    failures, unknown bugs — is ``permanent_fault``: retrying an
+    unclassified fault spends capacity exactly when the service is
+    least healthy, so unknown means permanent by default."""
+    if isinstance(exc, TransientExecutorError):
+        return TRANSIENT_FAULT
+    return PERMANENT_FAULT
+
+
+# ------------------------------------------------------ admission / router ---
+
+
+class QueueFullError(ServingError):
+    """Typed backpressure: the admission queue is at its depth limit."""
+
+    def __init__(self, depth: int, limit: int):
+        super().__init__(f"serving queue full: {depth} queued, limit {limit}")
+        self.depth = depth
+        self.limit = limit
+
+
+class NoReplicaAvailable(ServingError):
+    """Typed router backpressure: no live, non-draining replica exists to
+    take the request (all crashed, or all draining). The fleet analogue
+    of the scheduler's ``QueueFullError``."""
+
+    def __init__(self, total: int, draining: int, crashed: int):
+        super().__init__(
+            f"no routable replica: {total} total, {draining} draining, "
+            f"{crashed} crashed"
+        )
+        self.total = total
+        self.draining = draining
+        self.crashed = crashed
+
+
+class FleetConfigError(ValueError):
+    """Typed rejection of an unservable fleet configuration — most
+    importantly scale-to-zero (min_replicas < 1, or draining the last
+    routable replica through the autoscaling path)."""
+
+
+class ResilienceConfigError(ValueError):
+    """Typed rejection of an unservable resilience configuration — e.g.
+    a FaultPlan that injects stuck-forever faults into a priority class
+    with no service timeout (the simulation would never terminate), or
+    a retry budget with a non-positive backoff multiplier."""

@@ -54,8 +54,12 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.serving.scheduler import (
+from repro.serving.errors import (  # noqa: F401  (re-exported names)
+    FleetConfigError,
+    NoReplicaAvailable,
     QueueFullError,
+)
+from repro.serving.scheduler import (
     RequestScheduler,
     SchedulerConfig,
     ServeRequest,
@@ -69,7 +73,9 @@ from repro.serving.simulator import (
     _round,
     _sample_mix,
     reference_engine,
+    resilience_block,
 )
+from repro.telemetry.analysis import nearest_rank
 
 #: router policies (see Fleet._pick). cache_affinity is the default the
 #: presets commit to — it is the one that exploits the PR 5 signature
@@ -80,27 +86,6 @@ ROUTER_POLICIES = (
     "join_shortest_queue",
     "cache_affinity",
 )
-
-
-class FleetConfigError(ValueError):
-    """Typed rejection of an unservable fleet configuration — most
-    importantly scale-to-zero (min_replicas < 1, or draining the last
-    routable replica through the autoscaling path)."""
-
-
-class NoReplicaAvailable(Exception):
-    """Typed router backpressure: no live, non-draining replica exists to
-    take the request (all crashed, or all draining). The fleet analogue
-    of the scheduler's ``QueueFullError``."""
-
-    def __init__(self, total: int, draining: int, crashed: int):
-        super().__init__(
-            f"no routable replica: {total} total, {draining} draining, "
-            f"{crashed} crashed"
-        )
-        self.total = total
-        self.draining = draining
-        self.crashed = crashed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +159,14 @@ class FleetConfig:
     autoscaler: Optional[AutoscalerConfig] = None
     events: tuple = ()
     execute: bool = False
+    # resilience policy + seeded fault injection (serving/resilience.py):
+    # every replica's scheduler runs under the same policy/plan (keyed by
+    # its replica id, so injection decisions and backoff jitter differ
+    # per replica); the fleet layer additionally runs the hedging loop
+    # when ``resilience.hedge`` is set. Both None keeps PR 6 behavior —
+    # and the committed fleet golden traces — bit-for-bit unchanged.
+    resilience: Optional[object] = None
+    fault_plan: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -192,6 +185,12 @@ class FleetRequest:
     finish_s: Optional[float] = None
     completion: Optional[object] = None
     completions_seen: int = 0
+    # live copies of this request across the fleet: (replica id, local
+    # request id) -> is_hedge. Normally one entry; hedged re-dispatch
+    # adds a second, and the first SERVED completion cancels the rest
+    # via the ledger (the exactly-once race, DESIGN.md §7.3).
+    copies: dict = dataclasses.field(default_factory=dict)
+    hedges: int = 0  # hedge copies ever granted to this request
 
 
 class Replica:
@@ -209,6 +208,9 @@ class Replica:
             clock=fleet.clock,
             service_model=fleet.cfg.service,
             execute=fleet.cfg.execute,
+            resilience=fleet.cfg.resilience,
+            fault_plan=fleet.cfg.fault_plan,
+            replica_id=rid,
         )
         self.busy_until = fleet.clock.now()
         self.inflight = False
@@ -274,6 +276,15 @@ class Fleet:
         self.routes = 0
         self.affinity_hits = 0
         self.cold_compiles = 0
+        # hedging state (resilience.hedge): accepted hedge submissions,
+        # races won by the hedge copy, and loser copies cancelled out of
+        # queues by the ledger. The latency window feeds the p99-derived
+        # hedge threshold — served end-to-end seconds, newest last.
+        self._hedge = getattr(cfg.resilience, "hedge", None)
+        self.hedges = 0
+        self.hedge_wins = 0
+        self.hedge_cancelled = 0
+        self._lat: list[float] = []
         self.scale_log: list[dict] = []
         self.peak_routable = 0
         self._last_scale_s = -math.inf
@@ -467,15 +478,24 @@ class Fleet:
         self._fid[(target.id, lid)] = fid
         entry.replica = target.id
         entry.dispatches = 1
+        entry.copies[(target.id, lid)] = False
         return fid
 
     def _redispatch(self, reqs: list, now: float, source: Replica) -> None:
         """Exactly-once failover: each evacuated request keeps its fleet
         id and ORIGINAL arrival time (queue age travels with it), and is
         force-admitted at its new replica — depth limits must not turn
-        an admitted request into a lost one."""
+        an admitted request into a lost one. A copy whose fleet entry was
+        already SERVED (its hedge twin won the race before the crash) or
+        that still has a live twin queued elsewhere is simply dropped:
+        re-admitting it would be the double-serve the ledger forbids."""
         for req in sorted(reqs, key=lambda r: (r.arrival_s, r.id)):
             fid = self._fid.pop((source.id, req.id))
+            entry = self.ledger[fid]
+            was_hedge = entry.copies.pop((source.id, req.id), False)
+            if entry.outcome in ("completed", "demoted") or entry.copies:
+                self.hedge_cancelled += 1
+                continue
             target = self._pick(
                 req.vol, req.mode, req.executor, req.devices, req.precision,
                 exclude=source,
@@ -491,16 +511,21 @@ class Fleet:
                 force=True,
             )
             self._fid[(target.id, lid)] = fid
-            entry = self.ledger[fid]
             entry.replica = target.id
             entry.dispatches += 1
+            entry.copies[(target.id, lid)] = was_hedge
             self.redispatched += 1
 
     # ----------------------------------------------------------- event loop
 
     def _sync(self, rep: Replica) -> None:
         """Fold the replica's new completions into the fleet ledger and
-        stamp their telemetry with the replica id."""
+        stamp their telemetry with the replica id. With hedging on, a
+        fleet request can hold several live copies; the first SERVED
+        completion wins the entry and cancels the twins — a loser that
+        was merely evacuated (cancelled in queue) must not overwrite the
+        winner's outcome. ``completions_seen`` counts only served
+        completions, so it remains the double-serve detector."""
         comps = rep.sched.completions
         for c in comps[rep._synced:]:
             c.record.replica_id = rep.id
@@ -508,11 +533,100 @@ class Fleet:
             if fid is None:
                 continue
             entry = self.ledger[fid]
+            was_hedge = entry.copies.pop((rep.id, c.id), False)
+            served = c.outcome in ("completed", "demoted")
+            already_served = entry.outcome in ("completed", "demoted")
+            if already_served and not served:
+                continue  # losing copy shed after its twin won
             entry.outcome = c.outcome
             entry.finish_s = c.finish_s
             entry.completion = c
-            entry.completions_seen += 1
+            if served:
+                entry.completions_seen += 1
+                if was_hedge:
+                    self.hedge_wins += 1
+                self._observe_latency(c.finish_s - entry.arrival_s)
+                self._cancel_copies(entry)
         rep._synced = len(comps)
+
+    # ------------------------------------------------------------- hedging
+
+    def _observe_latency(self, e2e_s: float) -> None:
+        if self._hedge is None:
+            return
+        self._lat.append(e2e_s)
+        if len(self._lat) > self._hedge.window:
+            del self._lat[: len(self._lat) - self._hedge.window]
+
+    def _cancel_copies(self, entry: FleetRequest) -> None:
+        """Cancel every still-queued copy of a fleet request whose twin
+        just won: the scheduler counts the removal as an evacuation, so
+        each replica's own conservation ledger stays balanced."""
+        for (rid, lid) in list(entry.copies):
+            rep = self._by_id(rid)
+            if rep is None or not rep.live:
+                continue
+            got = rep.sched.cancel(lid)
+            if got is not None:
+                self._fid.pop((rid, lid), None)
+                entry.copies.pop((rid, lid), None)
+                self.hedge_cancelled += 1
+
+    def _hedge_threshold(self) -> Optional[float]:
+        h = self._hedge
+        if h is None or len(self._lat) < h.min_samples:
+            return None
+        return max(h.min_age_s, h.p99_factor * nearest_rank(self._lat, 99))
+
+    def _maybe_hedge(self, now: float) -> None:
+        """Tail-latency hedging: when a queued request's age crosses the
+        p99-derived threshold, dispatch a second copy to the least-loaded
+        replica NOT already holding one. First served completion wins;
+        the loser is cancelled through the ledger (zero double-serves).
+        Hedge copies are deliberately NOT counted as re-dispatches —
+        they are speculative, not failover."""
+        thr = self._hedge_threshold()
+        if thr is None:
+            return
+        for rep in sorted(self.replicas, key=lambda r: r.id):
+            if not rep.live:
+                continue
+            for req in list(rep.sched.queue):
+                if req.key is None:
+                    continue
+                fid = self._fid.get((rep.id, req.id))
+                if fid is None:
+                    continue
+                entry = self.ledger[fid]
+                if (
+                    now - entry.arrival_s < thr
+                    or entry.hedges >= self._hedge.max_hedges
+                    or entry.outcome is not None
+                ):
+                    continue
+                holders = {rid for (rid, _lid) in entry.copies}
+                cands = [
+                    r for r in self._routable() if r.id not in holders
+                ]
+                if not cands:
+                    continue
+                target = min(cands, key=self._load_jsq)
+                try:
+                    lid = target.sched.submit(
+                        req.vol,
+                        priority=req.priority_class.name,
+                        mode=req.mode,
+                        executor=req.executor,
+                        devices=req.devices,
+                        precision=req.precision,
+                        arrival_s=entry.arrival_s,
+                    )
+                except QueueFullError:
+                    continue
+                self._fid[(target.id, lid)] = fid
+                entry.copies[(target.id, lid)] = True
+                entry.hedges += 1
+                self.hedges += 1
 
     def _next_crash_t(self, rep: Replica) -> Optional[float]:
         for ev in self._events[self._ei:]:
@@ -534,9 +648,16 @@ class Fleet:
             if not rep.sched.queue:
                 continue
             batch = rep.sched.next_batch(now=now)
-            if batch is None:  # everything queued just expired (typed rejects)
+            if batch is None:
+                # Either everything queued just expired (typed rejects —
+                # new completions appeared) or the whole queue is gated
+                # behind retry backoff (no progress possible NOW: claiming
+                # progress would spin the event loop forever; the run loop
+                # instead sleeps to the queue's next_ready_s).
+                before = rep._synced
                 self._sync(rep)
-                progressed = True
+                if rep._synced != before:
+                    progressed = True
                 continue
             key = batch.requests[0].key
             start = now
@@ -616,6 +737,7 @@ class Fleet:
                     and rep.busy_until <= now
                 ):
                     rep.retired = True
+            self._maybe_hedge(now)
             if self._dispatch_idle(now):
                 continue
             cand = []
@@ -624,6 +746,12 @@ class Fleet:
             for rep in self.replicas:
                 if rep.live and rep.inflight:
                     cand.append(rep.busy_until)
+                elif rep.live and rep.sched.queue:
+                    # queue fully gated behind retry backoff: wake when
+                    # the earliest not_before_s elapses
+                    wake = rep.sched.next_ready_s(now)
+                    if wake is not None:
+                        cand.append(wake)
             if self._ei < len(self._events):
                 cand.append(self._events[self._ei].t)
             if auto and next_tick <= cfg.horizon_s:
@@ -749,7 +877,7 @@ class FleetReport:
                 }
             )
         total_batches = sum(r.sched.stats.batches for r in fl.replicas)
-        return {
+        out = {
             "scenario": self.cfg.name,
             "seed": self.cfg.seed,
             "horizon_s": _round(self.cfg.horizon_s),
@@ -798,6 +926,60 @@ class FleetReport:
             "scale_events": fl.scale_log,
             "per_replica": per_replica,
         }
+        # Resilience rollup only when the run was configured with a
+        # policy or a fault plan — pre-resilience goldens stay byte-exact.
+        if self.cfg.resilience is not None or self.cfg.fault_plan is not None:
+            out["resilience"] = self._resilience_block(served)
+        return out
+
+    def _resilience_block(self, served: list) -> dict:
+        fl = self.fleet
+        stats = [rep.sched.stats for rep in fl.replicas]
+        faulted = sum(s.faulted_requests for s in stats)
+        recovered = sum(s.recovered_requests for s in stats)
+        block: dict = {
+            "retries": sum(s.retries for s in stats),
+            "faults": {
+                "transient": sum(s.transient_faults for s in stats),
+                "permanent": sum(s.permanent_faults for s in stats),
+                "timeout": sum(s.timeouts for s in stats),
+            },
+            "faulted_requests": faulted,
+            "recovered_requests": recovered,
+            "recovery_rate": _round(recovered / max(faulted, 1)),
+            "hedges": fl.hedges,
+            "hedge_wins": fl.hedge_wins,
+            "hedge_cancelled": fl.hedge_cancelled,
+        }
+        breakers = [
+            (rep.id, rep.sched.breaker)
+            for rep in sorted(fl.replicas, key=lambda r: r.id)
+            if rep.sched.breaker is not None
+        ]
+        if breakers:
+            transitions = []
+            for rid, br in breakers:
+                for tr in br.transitions:
+                    transitions.append({**tr, "replica": rid})
+            transitions.sort(key=lambda tr: (tr["t"], tr["replica"]))
+            block["breaker"] = {
+                "trips": sum(br.trips for _, br in breakers),
+                "restores": sum(br.restores for _, br in breakers),
+                "probes": sum(br.probes for _, br in breakers),
+                "open_signatures": sorted(
+                    {s for _, br in breakers for s in br.open_signature_labels()}
+                ),
+                "transitions": transitions,
+            }
+        else:
+            block["breaker"] = None
+        rungs: dict[str, int] = {}
+        for e in served:
+            rec = e.completion.record
+            label = f"{rec.mode}/{rec.executor or '-'}"
+            rungs[label] = rungs.get(label, 0) + 1
+        block["rungs"] = dict(sorted(rungs.items()))
+        return block
 
     def to_json(self) -> str:
         return json.dumps(self.summary(), indent=1, sort_keys=True)
@@ -844,7 +1026,25 @@ def fleet_preset(
                          an autoscaled fleet (min 1, max 6): scale-up
                          through the morning ramp, scale-down after the
                          evening tail.
+    ``fleet_faultstorm`` — the resilience acceptance scenario: a
+                         4-replica fleet under a seeded fault storm
+                         (≥5% transient faults everywhere, one permanent-
+                         fault signature, one straggler replica, a rare
+                         stuck-forever fault) served under the full
+                         ResiliencePolicy: retries recover the
+                         transients, timeouts reap the stuck batches,
+                         the breaker demotes the poisoned signature down
+                         the executor ladder, and aged requests hedge to
+                         a second replica — zero lost, zero double-served.
     """
+    from repro.serving.resilience import (
+        BreakerConfig,
+        FaultPlan,
+        FaultRule,
+        HedgePolicy,
+        ResiliencePolicy,
+        RetryPolicy,
+    )
     from repro.serving.scheduler import PriorityClass
     from repro.serving.simulator import STANDARD_MIX
 
@@ -953,9 +1153,76 @@ def fleet_preset(
                 cooldown_s=120.0,
             ),
         )
+    if name == "fleet_faultstorm":
+        return FleetConfig(
+            name="fleet_faultstorm",
+            seed=seed,
+            horizon_s=horizon_s or 600.0,
+            process="poisson",
+            process_kwargs={"rate_hz": 6.0},
+            mix=STANDARD_MIX,
+            replicas=4,
+            policy="cache_affinity",
+            scheduler=SchedulerConfig(
+                max_queue_depth=64,
+                admission_hbm_bytes=512 * 1024 * 1024,
+                max_batch_requests=8,
+                native_shapes=True,
+            ),
+            service=FleetServiceModel(base_s=0.1, batch_overhead_s=0.05),
+            resilience=ResiliencePolicy(
+                retry=RetryPolicy(
+                    max_attempts=3,
+                    backoff_base_s=0.1,
+                    backoff_mult=2.0,
+                    backoff_max_s=2.0,
+                    jitter_frac=0.25,
+                    seed=seed,
+                ),
+                service_timeout_s={
+                    "interactive": 4.0,
+                    "standard": 8.0,
+                    "batch": 20.0,
+                },
+                hedge=HedgePolicy(
+                    p99_factor=3.0,
+                    min_age_s=1.0,
+                    min_samples=30,
+                    window=200,
+                    max_hedges=1,
+                ),
+                breaker=BreakerConfig(trip_after=3, cooldown_s=120.0),
+            ),
+            fault_plan=FaultPlan(
+                seed=seed,
+                rules=(
+                    # baseline transient noise everywhere (≥5%)
+                    FaultRule(kind="transient", rate=0.06),
+                    # one poisoned signature: xla int8w 32³ always dies
+                    # until the breaker walks it down the ladder
+                    FaultRule(
+                        kind="permanent",
+                        rate=1.0,
+                        executor_substr="xla",
+                        shape=(32, 32, 32),
+                        precision="int8w",
+                    ),
+                    # replica 2 is a 6x straggler: hedging + timeouts
+                    FaultRule(
+                        kind="straggler",
+                        rate=1.0,
+                        replica=2,
+                        slow_factor=6.0,
+                    ),
+                    # a rare stuck-forever batch member: only the
+                    # per-class service timeout reaps it
+                    FaultRule(kind="stuck", rate=0.004),
+                ),
+            ),
+        )
     raise KeyError(
         f"unknown fleet preset {name!r}: fleet_steady | fleet_overload | "
-        "fleet_failover | fleet_autoscale"
+        "fleet_failover | fleet_autoscale | fleet_faultstorm"
     )
 
 
@@ -964,4 +1231,5 @@ FLEET_PRESETS = (
     "fleet_overload",
     "fleet_failover",
     "fleet_autoscale",
+    "fleet_faultstorm",
 )

@@ -47,17 +47,20 @@ import math
 import time
 from typing import Any, Callable, Optional
 
+from repro.serving.errors import (  # noqa: F401  (QueueFullError re-exported)
+    EXECUTION_FAULT_TYPES,
+    PERMANENT_FAULT,
+    QueueFullError,
+    RETRYABLE_FAIL_TYPES,
+    SERVICE_TIMEOUT,
+    TRANSIENT_FAULT,
+    PermanentExecutorError,
+    ResilienceConfigError,
+    TransientExecutorError,
+    classify,
+)
 from repro.telemetry.budget import BudgetExceeded, MemoryBudget
 from repro.telemetry.record import StageTimes, TelemetryRecord
-
-
-class QueueFullError(Exception):
-    """Typed backpressure: the admission queue is at its depth limit."""
-
-    def __init__(self, depth: int, limit: int):
-        super().__init__(f"serving queue full: {depth} queued, limit {limit}")
-        self.depth = depth
-        self.limit = limit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +116,21 @@ class ServeRequest:
     key: Optional[GroupKey] = None
     bytes_priced: int = 0
     demoted: bool = False
+    # resilience state (serving/resilience.py). ``base_key`` is the
+    # signature as admitted, BEFORE any breaker demotion — the breaker's
+    # ledger key and the rung half-open probes retry; ``attempt`` counts
+    # completed service attempts (0 == first try); ``not_before_s`` is
+    # the retry-backoff gate (the request stays queued but is not
+    # batchable until then — its ORIGINAL arrival stamp is untouched, so
+    # deadlines and FIFO order stay honest); ``probe`` marks a half-open
+    # breaker probe serving at the base rung; ``faults`` counts the
+    # retryable faults this request has absorbed (recovery accounting).
+    base_key: Optional[GroupKey] = None
+    base_bytes: int = 0
+    attempt: int = 0
+    not_before_s: float = 0.0
+    probe: bool = False
+    faults: int = 0
 
 
 @dataclasses.dataclass
@@ -168,6 +186,18 @@ class SchedulerStats:
     grouped_requests: int = 0
     resolutions: int = 0
     max_queue_depth: int = 0
+    # resilience counters (serving/resilience.py). Retried attempts are
+    # NOT terminal states: a request that faults and re-enters its lane
+    # is still exactly one of completed/demoted/rejected/evacuated in
+    # the conservation sum above — these count events, not requests,
+    # except the last pair which counts terminal requests for the
+    # recovery rate (recovered/faulted).
+    retries: int = 0
+    transient_faults: int = 0
+    permanent_faults: int = 0
+    timeouts: int = 0
+    faulted_requests: int = 0
+    recovered_requests: int = 0
 
     def rejected_total(self) -> int:
         return sum(self.rejected.values())
@@ -225,12 +255,35 @@ class RequestScheduler:
         clock=None,
         service_model=None,
         execute: bool = True,
+        resilience=None,
+        fault_plan=None,
+        replica_id: int = 0,
     ):
         self.engine = engine
         self.cfg = cfg or SchedulerConfig()
         self.clock = clock or _MonotonicClock()
         self.service_model = service_model
         self.execute = execute
+        # resilience policy (serving/resilience.py): retry budgets,
+        # per-class service timeouts, and the breaker-driven degradation
+        # ladder. ``fault_plan`` is the seeded injector the deterministic
+        # fault harness uses; ``replica_id`` keys injection decisions and
+        # backoff jitter so fleet replicas de-correlate.
+        self.resilience = resilience
+        self.fault_plan = fault_plan
+        self.replica_id = replica_id
+        if resilience is not None:
+            resilience.validate_against(self.cfg.classes, fault_plan)
+        elif fault_plan is not None and fault_plan.has_stuck():
+            raise ResilienceConfigError(
+                "FaultPlan injects stuck-forever faults but no "
+                "ResiliencePolicy (service timeouts) is configured"
+            )
+        self.breaker = None
+        if resilience is not None and resilience.breaker is not None:
+            from repro.serving.resilience import SignatureBreaker
+
+            self.breaker = SignatureBreaker(resilience.breaker)
         self.queue: list[ServeRequest] = []
         self.completions: list[Completion] = []
         self.stats = SchedulerStats()
@@ -289,6 +342,7 @@ class RequestScheduler:
             precision=precision,
         )
         req.key, req.bytes_priced = self._resolve(req)
+        req.base_key, req.base_bytes = req.key, req.bytes_priced
         self.queue.append(req)
         self.stats.admitted += 1
         self.stats.max_queue_depth = max(self.stats.max_queue_depth, len(self.queue))
@@ -376,11 +430,12 @@ class RequestScheduler:
 
     # ------------------------------------------------------------ dispatch
 
-    def _seed_index(self) -> int:
-        """Oldest request of the highest-priority class (FIFO within a
-        class; ids break arrival ties deterministically)."""
+    def _seed_index(self, ready: list[int]) -> int:
+        """Oldest ready request of the highest-priority class (FIFO within
+        a class; ids break arrival ties deterministically). ``ready``
+        indexes the queue entries not gated by retry backoff."""
         return min(
-            range(len(self.queue)),
+            ready,
             key=lambda i: (
                 self.queue[i].priority_class.priority,
                 self.queue[i].arrival_s,
@@ -433,9 +488,15 @@ class RequestScheduler:
         now = self.clock.now() if now is None else now
         while True:
             self._shed_expired(now)
-            if not self.queue:
+            ready = [
+                i for i, r in enumerate(self.queue) if r.not_before_s <= now
+            ]
+            if not ready:
+                # empty queue, or every queued request is in retry
+                # backoff — next_ready_s() tells event loops when to wake
                 return None
-            seed = self.queue.pop(self._seed_index())
+            seed = self.queue.pop(self._seed_index(ready))
+            self._apply_breaker(seed, now)
             cap = self.cfg.admission_hbm_bytes
             if cap is not None and seed.key is not None and seed.bytes_priced > cap:
                 form = self._demoted_form(seed)
@@ -449,11 +510,19 @@ class RequestScheduler:
                 for req in [r for r in self.queue]:
                     if len(members) >= self.cfg.max_batch_requests:
                         break
-                    # a candidate over the cap is judged (and, if taken,
-                    # admitted) in its DEMOTED form — so the requests an
-                    # overload demotes still batch together instead of
-                    # each paying a solo dispatch
+                    if req.not_before_s > now:
+                        continue  # still gated by retry backoff
+                    # a candidate is judged at the form it would actually
+                    # serve in: its breaker rung first (PEEKED, so no
+                    # probe slot is claimed for a request we may not
+                    # take), then — if over the cap — its DEMOTED form,
+                    # so the requests an overload demotes still batch
+                    # together instead of each paying a solo dispatch
                     key, bts, via_demotion = req.key, req.bytes_priced, False
+                    if self.breaker is not None and req.base_key is not None:
+                        key, bts = self._breaker_form(
+                            req, self.breaker.peek_rung(req.base_key, now)
+                        )
                     if cap is not None and key is not None and bts > cap:
                         form = self._demoted_form(req)
                         if form is None or form[1] > cap:
@@ -466,6 +535,7 @@ class RequestScheduler:
                         and (cap is None or total + bts <= cap)
                     ):
                         self.queue.remove(req)
+                        self._apply_breaker(req, now)
                         if via_demotion:
                             self._apply_demotion(req, key, bts)
                         members.append(req)
@@ -506,6 +576,42 @@ class RequestScheduler:
         req.bytes_priced = bts
         req.demoted = True
 
+    def _breaker_form(
+        self, req: ServeRequest, rung: int
+    ) -> tuple[GroupKey, int]:
+        """The (key, priced bytes) ``req`` serves at ``rung`` steps down
+        the degradation ladder from its BASE signature, re-resolved
+        through the executor registry and re-priced for admission. Rung
+        0 is the base form (a restored breaker or a half-open probe);
+        the walk caps at the ladder's bottom rung."""
+        if rung <= 0:
+            return req.base_key, req.base_bytes
+        from repro.serving.resilience import demote_rung
+
+        key = req.base_key
+        for _ in range(rung):
+            nxt = demote_rung(key, self.engine)
+            if nxt is None:
+                break  # already at the sub-volume failsafe
+            key = nxt
+        return key, self._price(key.mode, key.shape, key.precision)
+
+    def _apply_breaker(self, req: ServeRequest, now: float) -> None:
+        """Pin the request to its breaker-effective form on admission to
+        a batch: claims the half-open probe slot when this request is
+        the probe, walks the ladder otherwise. ``demoted`` tracks
+        whether the EFFECTIVE mode is the sub-volume failsafe, so ladder
+        restores un-demote and ladder bottoms count as demotions — same
+        outcome vocabulary as admission demotion."""
+        if self.breaker is None or req.base_key is None:
+            return
+        rung, probe = self.breaker.effective_rung(req.base_key, now)
+        req.key, req.bytes_priced = self._breaker_form(req, rung)
+        req.probe = probe
+        req.demoted = (
+            req.key.mode == "subvolume" and req.base_key.mode != "subvolume"
+        )
+
     # ------------------------------------------------------------ service
 
     def run_batch(self, batch: Batch, now: Optional[float] = None) -> float:
@@ -514,8 +620,9 @@ class RequestScheduler:
         shared compile/weights, not parallelism). Each member's telemetry
         is stamped with queue wait, service time, and the group size; a
         member that *raises* (garbage volume, executor bug) gets a typed
-        ``executor_error`` failure record while the rest of the group
-        completes. Returns the batch finish time."""
+        failure record classified along the transient/permanent axis
+        (serving/errors.py) while the rest of the group completes.
+        Returns the batch finish time."""
         t, unserved = self.run_batch_until(batch, None, now=now)
         assert not unserved  # until=None serves every member
         return t
@@ -548,13 +655,24 @@ class RequestScheduler:
             t += self.service_model.batch_overhead_s
         for idx, req in enumerate(batch.requests):
             if until is not None:
-                # preview the member's modeled duration WITHOUT serving it
-                preview = self._modeled_record(req)
-                if t + self.service_model.service_s(preview) > until:
+                # preview the member's modeled duration WITHOUT serving
+                # it — _attempt_record/_attempt_service are pure, so the
+                # preview matches the serve exactly, injected faults,
+                # straggler factors and timeouts included
+                preview, p_decision = self._attempt_record(req, t)
+                p_service, _ = self._attempt_service(preview, p_decision, req)
+                if t + p_service > until:
                     return t, list(batch.requests[idx:])
-            result, rec = self._serve_one(req)
+            result, rec, decision = self._serve_one(req, t)
             if self.service_model is not None:
-                service = self.service_model.service_s(rec)
+                service, timed_out = self._attempt_service(rec, decision, req)
+                if timed_out:
+                    # the attempt is cancelled AT the bound: the member
+                    # occupied the replica for exactly the timeout, and
+                    # the fault is retryable (a retry lands on a fresh
+                    # attempt — the CHIPS stuck-job discipline)
+                    rec.status = "fail"
+                    rec.fail_type = SERVICE_TIMEOUT
             else:
                 service = max(0.0, self.clock.now() - t)
             finish = t + service
@@ -564,28 +682,141 @@ class RequestScheduler:
             # and predecessors' serialized service included), so
             # queue_wait_s + service_s == finish - arrival exactly — the
             # identity the SLO rollups in telemetry/analysis.py rely on.
+            # Retried attempts keep the ORIGINAL arrival, so the identity
+            # spans every attempt of a request, not just the first.
             rec.queue_wait_s = max(0.0, t - req.arrival_s)
             rec.service_s = service
             rec.batch_size = len(batch.requests)
             rec.priority_class = req.priority_class.name
             rec.demoted = req.demoted
-            outcome = "demoted" if req.demoted else "completed"
-            if req.demoted:
-                self.stats.demoted += 1
-            else:
-                self.stats.completed += 1
-            self.completions.append(
-                Completion(
-                    id=req.id,
-                    outcome=outcome,
-                    record=rec,
-                    result=result,
-                    arrival_s=req.arrival_s,
-                    finish_s=finish,
-                )
-            )
+            rec.attempt = req.attempt
+            self._finish_attempt(req, rec, result, finish)
             t = finish
         return t, []
+
+    def _finish_attempt(self, req, rec, result, finish: float) -> None:
+        """Fold one finished service attempt into breaker, retry, and
+        conservation state. A retryable fault with budget remaining is
+        NON-terminal: the request re-enters its signature lane (original
+        arrival stamp, backoff-gated) and no Completion is appended —
+        the conservation sum counts requests, not attempts. Everything
+        else is terminal exactly as before."""
+        is_fault = (
+            rec.status == "fail" and rec.fail_type in EXECUTION_FAULT_TYPES
+        )
+        if is_fault:
+            if rec.fail_type == TRANSIENT_FAULT:
+                self.stats.transient_faults += 1
+            elif rec.fail_type == PERMANENT_FAULT:
+                self.stats.permanent_faults += 1
+            else:
+                self.stats.timeouts += 1
+        if self.breaker is not None and req.base_key is not None:
+            self.breaker.on_result(
+                req.base_key, fault=is_fault, probe=req.probe, now=finish
+            )
+        retryable = (
+            rec.status == "fail" and rec.fail_type in RETRYABLE_FAIL_TYPES
+        )
+        if retryable:
+            req.faults += 1
+        if (
+            retryable
+            and self.resilience is not None
+            and req.attempt + 1 < self.resilience.retry.max_attempts
+        ):
+            req.attempt += 1
+            req.probe = False
+            req.not_before_s = finish + self.resilience.retry.backoff_s(
+                req.attempt, self.replica_id, req.id
+            )
+            self.stats.retries += 1
+            self.queue.append(req)
+            self.stats.max_queue_depth = max(
+                self.stats.max_queue_depth, len(self.queue)
+            )
+            return
+        outcome = "demoted" if req.demoted else "completed"
+        if req.demoted:
+            self.stats.demoted += 1
+        else:
+            self.stats.completed += 1
+        if req.faults:
+            self.stats.faulted_requests += 1
+            if rec.status == "ok":
+                self.stats.recovered_requests += 1
+        self.completions.append(
+            Completion(
+                id=req.id,
+                outcome=outcome,
+                record=rec,
+                result=result,
+                arrival_s=req.arrival_s,
+                finish_s=finish,
+            )
+        )
+
+    def _fault_decision(self, req: ServeRequest, t: float):
+        """The seeded injector's verdict for this attempt — pure in
+        (plan seed, time, replica, effective signature, request id,
+        attempt). Keyed on the EFFECTIVE key: a breaker-demoted
+        signature escapes rules that match only its faulty rung, which
+        is what lets the ladder route around a poisoned executor."""
+        if self.fault_plan is None or req.key is None:
+            return None
+        return self.fault_plan.decide(
+            t=t,
+            replica=self.replica_id,
+            key=req.key,
+            request_id=req.id,
+            attempt=req.attempt,
+            priority=req.priority_class.name,
+        )
+
+    def _attempt_record(self, req: ServeRequest, t: float):
+        """(modeled record, fault decision) for one attempt at ``t`` —
+        no logging, no state: the truncation preview and the actual
+        serve call this with identical arguments and must agree."""
+        rec = self._modeled_record(req)
+        decision = self._fault_decision(req, t)
+        if decision is not None and rec.status == "ok":
+            if decision.kind == "transient":
+                rec.status, rec.fail_type = "fail", TRANSIENT_FAULT
+            elif decision.kind == "permanent":
+                rec.status, rec.fail_type = "fail", PERMANENT_FAULT
+            if rec.status == "fail":
+                rec.extra = {
+                    "injected": decision.kind,
+                    "rule": decision.rule_index,
+                }
+        return rec, decision
+
+    def _attempt_service(self, rec, decision, req: ServeRequest):
+        """(service_s, timed_out) for one modeled attempt: the service
+        model's duration, inflated by an injected straggler factor,
+        infinite for a stuck fault, then clipped at the class's service
+        timeout. The clip IS the cancellation — the attempt holds the
+        replica for exactly the bound. A stuck fault with no timeout is
+        unservable and raises typed (also rejected at construction)."""
+        service = self.service_model.service_s(rec)
+        if decision is not None and rec.status == "ok":
+            if decision.kind == "straggler":
+                service *= decision.slow_factor
+            elif decision.kind == "stuck":
+                service = math.inf
+        timeout = (
+            None
+            if self.resilience is None
+            else self.resilience.timeout_for(req.priority_class.name)
+        )
+        if timeout is not None and service > timeout:
+            return timeout, True
+        if math.isinf(service):
+            raise ResilienceConfigError(
+                f"stuck fault on class {req.priority_class.name!r} with "
+                "no service timeout configured"
+            )
+        return service, False
 
     def evacuate(self, now: Optional[float] = None) -> list:
         """Hand every queued request back to the caller (fleet failover /
@@ -597,6 +828,31 @@ class RequestScheduler:
         self.queue.clear()
         self.stats.evacuated += len(out)
         return out
+
+    def cancel(self, rid: int):
+        """Remove ONE queued request before service — the fleet's
+        hedge-loser cancellation (serving/fleet.py): its twin completed
+        elsewhere, so this copy must never serve. Counted ``evacuated``
+        in the conservation ledger (admitted here, resolved elsewhere —
+        the same terminal state crash evacuation uses). Returns the
+        request, or None when it is not queued (already served, shed,
+        or never here) — in which case nothing changes."""
+        for req in self.queue:
+            if req.id == rid:
+                self.queue.remove(req)
+                self.stats.evacuated += 1
+                return req
+        return None
+
+    def next_ready_s(self, now: float) -> Optional[float]:
+        """When every queued request is gated by retry backoff, the
+        earliest ``not_before_s`` — the wake time event loops must
+        advance to (the virtual clock cannot busy-wait). None when the
+        queue is empty or some request is ready now."""
+        if not self.queue:
+            return None
+        earliest = min(r.not_before_s for r in self.queue)
+        return earliest if earliest > now else None
 
     def peek_signature(
         self,
@@ -625,16 +881,31 @@ class RequestScheduler:
         )
         return self._resolve(probe)
 
-    def _serve_one(self, req: ServeRequest):
-        """(PipelineResult | None, TelemetryRecord) for one request —
-        real execution, typed-failure capture, or the modeled record of
-        the pure discrete-event mode."""
+    def _serve_one(self, req: ServeRequest, t: float):
+        """(PipelineResult | None, TelemetryRecord, FaultDecision | None)
+        for one service attempt — real execution with typed-failure
+        capture, or the modeled record of the pure discrete-event mode.
+        Either way, raised exceptions are CLASSIFIED along the
+        transient/permanent axis (serving/errors.py) instead of stamped
+        with PR 5's blanket ``executor_error``, and the seeded fault
+        plan can inject faults on this attempt."""
         key = req.key
         if not self.execute:
-            rec = self._modeled_record(req)
+            rec, decision = self._attempt_record(req, t)
             self.engine.log.append(rec)
-            return None, rec
+            return None, rec, decision
+        decision = self._fault_decision(req, t)
         try:
+            if decision is not None and decision.kind in ("transient", "permanent"):
+                err = (
+                    TransientExecutorError
+                    if decision.kind == "transient"
+                    else PermanentExecutorError
+                )
+                raise err(
+                    f"injected {decision.kind} fault "
+                    f"(rule {decision.rule_index})"
+                )
             result = self.engine._run_request(
                 req.vol,
                 mode=key.mode if key else req.mode,
@@ -648,7 +919,7 @@ class RequestScheduler:
                 if key and self.cfg.native_shapes
                 else None,
             )
-            return result, result.record
+            return result, result.record, decision
         except Exception as e:  # fault isolation: one bad request != batch
             rec = TelemetryRecord(
                 model=self.engine.cfg.name,
@@ -657,11 +928,11 @@ class RequestScheduler:
                 times=StageTimes(),
                 executor=key.executor if key else None,
                 precision=key.precision if key else None,
-                fail_type="executor_error",
+                fail_type=classify(e),
                 extra={"error": f"{type(e).__name__}: {e}"},
             )
             self.engine.log.append(rec)
-            return None, rec
+            return None, rec, decision
 
     def _modeled_record(self, req: ServeRequest) -> TelemetryRecord:
         """Synthesized telemetry for ``execute=False`` runs: status and
@@ -678,7 +949,7 @@ class RequestScheduler:
                 mode="none",
                 status="fail",
                 times=StageTimes(),
-                fail_type="executor_error",
+                fail_type=PERMANENT_FAULT,
                 extra={"error": "garbage volume (modeled)"},
             )
         cfg = self.engine.cfg
@@ -745,7 +1016,20 @@ class RequestScheduler:
         while True:
             batch = self.next_batch()
             if batch is None:
-                break
+                if not self.queue:
+                    break
+                # every queued request is in retry backoff: pass the
+                # time — a virtual clock jumps, the production clock
+                # sleeps (drain is the synchronous service loop; the
+                # simulator's event loops advance instead of blocking)
+                wake = self.next_ready_s(self.clock.now())
+                if wake is None:
+                    continue  # raced: something became ready
+                if hasattr(self.clock, "advance_to"):
+                    self.clock.advance_to(wake)
+                else:
+                    time.sleep(max(0.0, wake - self.clock.now()))
+                continue
             self.run_batch(batch)
         assert self.stats.conserved(), (
             f"conservation violated: {self.stats}"

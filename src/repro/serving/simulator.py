@@ -182,6 +182,11 @@ class SimConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     execute: bool = False
     service: ServiceModel = dataclasses.field(default_factory=ServiceModel)
+    # resilience policy + seeded fault injection (serving/resilience.py);
+    # both None keeps the PR 5 behavior — and the committed golden
+    # traces — bit-for-bit unchanged.
+    resilience: Optional[object] = None
+    fault_plan: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -222,7 +227,7 @@ class SimReport:
         served_all = [
             c for c in self.completions if c.outcome in ("completed", "demoted")
         ]
-        return {
+        out = {
             "scenario": self.cfg.name,
             "seed": self.cfg.seed,
             "horizon_s": _round(self.cfg.horizon_s),
@@ -243,6 +248,11 @@ class SimReport:
             "latency_ms": _pctls_ms([c.finish_s - c.arrival_s for c in served_all]),
             "classes": classes,
         }
+        if self.cfg.resilience is not None or self.cfg.fault_plan is not None:
+            # only stamped when the resilience layer is configured, so
+            # the PR 5 golden summaries stay byte-identical
+            out["resilience"] = resilience_block(self.scheduler, served_all)
+        return out
 
     def to_json(self) -> str:
         return json.dumps(self.summary(), indent=1, sort_keys=True)
@@ -259,6 +269,44 @@ def _pctls_ms(values) -> dict:
         "p99": _round(nearest_rank(ms, 99)),
         "mean": _round(sum(ms) / len(ms) if ms else 0.0),
         "max": _round(max(ms) if ms else 0.0),
+    }
+
+
+def resilience_block(sched, served) -> dict:
+    """The deterministic resilience rollup of ONE scheduler — retry /
+    fault / recovery counters, breaker state machine history, and
+    per-rung serve counts (which executor rung actually answered each
+    served request — the degradation ladder made visible). Shared by the
+    single-server summary here and the per-replica aggregation in
+    serving/fleet.py."""
+    st = sched.stats
+    rungs: dict[str, int] = {}
+    for c in served:
+        label = f"{c.record.mode}/{c.record.executor or '-'}"
+        rungs[label] = rungs.get(label, 0) + 1
+    br = sched.breaker
+    return {
+        "retries": st.retries,
+        "faults": {
+            "transient": st.transient_faults,
+            "permanent": st.permanent_faults,
+            "timeout": st.timeouts,
+        },
+        "faulted_requests": st.faulted_requests,
+        "recovered_requests": st.recovered_requests,
+        "recovery_rate": _round(
+            st.recovered_requests / max(st.faulted_requests, 1)
+        ),
+        "breaker": None
+        if br is None
+        else {
+            "trips": br.trips,
+            "restores": br.restores,
+            "probes": br.probes,
+            "open_signatures": br.open_signature_labels(),
+            "transitions": br.transitions,
+        },
+        "rungs": dict(sorted(rungs.items())),
     }
 
 
@@ -313,6 +361,8 @@ def simulate(engine, cfg: SimConfig) -> SimReport:
         clock=clock,
         service_model=cfg.service,
         execute=cfg.execute,
+        resilience=cfg.resilience,
+        fault_plan=cfg.fault_plan,
     )
     i = 0
     refused = 0
@@ -339,7 +389,17 @@ def simulate(engine, cfg: SimConfig) -> SimReport:
             i += 1
         batch = sched.next_batch(now=clock.now())
         if batch is None:
-            continue  # everything queued just expired; loop to next arrival
+            wake = sched.next_ready_s(clock.now())
+            if wake is not None:
+                # every queued request is in retry backoff: advance to
+                # whichever comes first — the next arrival or the
+                # earliest backoff expiry (the virtual clock must jump;
+                # it cannot busy-wait)
+                if i < n and arrivals[i][0] < wake:
+                    clock.advance_to(arrivals[i][0])
+                else:
+                    clock.advance_to(wake)
+            continue  # else: everything queued just expired; next arrival
         finish = sched.run_batch(batch)
         clock.advance_to(finish)
     completions = sorted(sched.completions, key=lambda c: c.id)

@@ -285,6 +285,75 @@ def replica_summary(records) -> list[ReplicaSummary]:
     return out
 
 
+#: execution-fault fail_types the resilience layer stamps
+#: (serving/errors.py). Hardcoded strings rather than an import:
+#: repro.serving imports repro.telemetry, so importing serving.errors
+#: here would create an import cycle — the golden tests pin both sides.
+FAULT_TYPES = ("transient_fault", "permanent_fault", "service_timeout")
+#: the retryable subset — the recovery denominator: permanent faults are
+#: unrecoverable BY DESIGN (the ladder routes around them instead), so
+#: they must not dilute the retry layer's recovery rate.
+RETRYABLE_TYPES = ("transient_fault", "service_timeout")
+
+
+@dataclasses.dataclass
+class ResilienceSummary:
+    """Aggregate of the resilience layer's attempt stream — reconstructed
+    from telemetry alone (TelemetryRecord.attempt, serving/errors.py fail
+    types): every service attempt emits its own record, so grouping on
+    (replica_id, request_id) and taking the highest attempt recovers each
+    request's terminal state without consulting the scheduler."""
+
+    requests: int  # scheduler-stamped requests seen (unique ids)
+    attempts: int  # service-attempt records (>= requests)
+    retries: int  # attempts beyond each request's first
+    faults: dict  # fail_type -> attempt count, over FAULT_TYPES
+    faulted_requests: int  # requests with >= 1 RETRYABLE faulted attempt
+    recovered_requests: int  # faulted requests whose terminal attempt is ok
+    recovery_rate: float  # recovered / faulted (1.0 when nothing faulted)
+
+    def row(self) -> str:
+        return (
+            f"{self.requests},{self.attempts},{self.retries},"
+            f"{sum(self.faults.values())},{self.faulted_requests},"
+            f"{self.recovered_requests},{self.recovery_rate:.3f}"
+        )
+
+
+def resilience_summary(records) -> ResilienceSummary:
+    """Fault/retry/recovery rollup over a telemetry log — the analysis
+    face of serving/resilience.py. Records without a ``request_id`` stamp
+    (direct pipeline runs) are skipped; pre-service sheds (``SHED_TYPES``)
+    are not attempts and are skipped too."""
+    by: dict[tuple, list] = {}
+    for r in records:
+        if r.request_id is None or r.fail_type in SHED_TYPES:
+            continue
+        by.setdefault((r.replica_id, r.request_id), []).append(r)
+    attempts = sum(len(rs) for rs in by.values())
+    faults = {
+        t: sum(1 for rs in by.values() for r in rs if r.fail_type == t)
+        for t in FAULT_TYPES
+    }
+    faulted = recovered = 0
+    for rs in by.values():
+        if not any(r.fail_type in RETRYABLE_TYPES for r in rs):
+            continue
+        faulted += 1
+        terminal = max(rs, key=lambda r: r.attempt)
+        if terminal.status == "ok":
+            recovered += 1
+    return ResilienceSummary(
+        requests=len(by),
+        attempts=attempts,
+        retries=attempts - len(by),
+        faults=faults,
+        faulted_requests=faulted,
+        recovered_requests=recovered,
+        recovery_rate=recovered / faulted if faulted else 1.0,
+    )
+
+
 def precision_summary(records) -> list[PrecisionSummary]:
     """Per-(executor, precision) traffic/footprint aggregates over a
     telemetry log — the fleet view of the precision policy: which backend

@@ -87,6 +87,12 @@ class TelemetryRecord:
     # request re-dispatched after a replica crash carries the replica
     # that finally SERVED it, never the one that lost it.
     replica_id: Optional[int] = None
+    # which service attempt this record describes (0 = first try): the
+    # resilience layer (serving/resilience.py) re-serves retryable
+    # faults, and every attempt emits its own record — grouping on
+    # (replica_id, request_id) and taking the last attempt reconstructs
+    # each request's terminal state from the stream alone.
+    attempt: int = 0
     extra: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> str:

@@ -1,0 +1,503 @@
+"""Unit + golden tests for the resilience layer (serving/errors.py,
+serving/resilience.py, and its threading through scheduler/fleet).
+
+Three tiers:
+
+  * policy-object unit tests — backoff shape and determinism, breaker
+    state machine, ladder demotion through the executor registry, fault
+    plans as pure functions of (seed, identity), config validation;
+  * single-scheduler behavior — retries recover transients with the
+    ORIGINAL arrival preserved, timeouts reap stuck members, breakers
+    demote a poisoned signature and half-open probes restore it;
+  * the committed fault-storm golden — tests/golden/fleet_faultstorm.json
+    asserted byte-exactly, plus the semantic acceptance claims the trace
+    must keep showing (recovery >= 90%, ladder demotion of the poisoned
+    signature, zero lost / zero double-served).
+
+Regenerate the golden (ONLY on intentional behavior change):
+
+    PYTHONPATH=src python -c "
+    from repro.serving.fleet import simulate_fleet, fleet_preset
+    rep = simulate_fleet(fleet_preset('fleet_faultstorm', seed=0))
+    open('tests/golden/fleet_faultstorm.json', 'w').write(rep.to_json() + '\\n')"
+"""
+
+import collections
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.serving.errors import (
+    PERMANENT_FAULT,
+    SERVICE_TIMEOUT,
+    TRANSIENT_FAULT,
+    PermanentExecutorError,
+    ResilienceConfigError,
+    TransientExecutorError,
+    classify,
+)
+from repro.serving.resilience import (
+    LADDER,
+    BreakerConfig,
+    FaultPlan,
+    FaultRule,
+    HedgePolicy,
+    ResiliencePolicy,
+    RetryPolicy,
+    SignatureBreaker,
+    demote_rung,
+    unit_hash,
+)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# a stand-in dispatch signature for breaker unit tests: same attribute
+# surface as scheduler.GroupKey, hashable, no engine required
+Key = collections.namedtuple("Key", "mode executor devices precision shape")
+
+
+def _key(executor="xla", mode="streaming", precision="fp32", shape=(32, 32, 32)):
+    return Key(mode=mode, executor=executor, devices=None,
+               precision=precision, shape=shape)
+
+
+# ------------------------------------------------------------- taxonomy ---
+
+
+def test_classify_taxonomy():
+    assert classify(TransientExecutorError("blip")) == TRANSIENT_FAULT
+    assert classify(PermanentExecutorError("poison")) == PERMANENT_FAULT
+    # unknown exceptions classify conservatively: no blind retries
+    assert classify(ValueError("who knows")) == PERMANENT_FAULT
+    assert classify(RuntimeError("nor this")) == PERMANENT_FAULT
+
+
+# ------------------------------------------------------------ unit_hash ---
+
+
+def test_unit_hash_deterministic_and_uniform_range():
+    draws = [unit_hash("fault", 0, i) for i in range(1000)]
+    assert all(0.0 <= u < 1.0 for u in draws)
+    assert draws == [unit_hash("fault", 0, i) for i in range(1000)]
+    # different identities decorrelate (coarse sanity, not a statistics test)
+    assert 0.4 < sum(draws) / len(draws) < 0.6
+    assert unit_hash("a", 1) != unit_hash("a", 2)
+
+
+# ---------------------------------------------------------------- retry ---
+
+
+def test_backoff_grows_exponentially_and_caps():
+    p = RetryPolicy(max_attempts=6, backoff_base_s=0.1, backoff_mult=2.0,
+                    backoff_max_s=0.4, jitter_frac=0.0)
+    assert p.backoff_s(1, 0, 0) == pytest.approx(0.1)
+    assert p.backoff_s(2, 0, 0) == pytest.approx(0.2)
+    assert p.backoff_s(3, 0, 0) == pytest.approx(0.4)
+    assert p.backoff_s(5, 0, 0) == pytest.approx(0.4)  # capped
+
+
+def test_backoff_jitter_is_bounded_and_deterministic():
+    p = RetryPolicy(backoff_base_s=1.0, backoff_mult=1.0, backoff_max_s=1.0,
+                    jitter_frac=0.25, seed=7)
+    vals = [p.backoff_s(1, 0, rid) for rid in range(200)]
+    assert all(0.75 <= v <= 1.25 for v in vals)
+    assert len(set(vals)) > 100  # jitter actually varies per request
+    assert vals == [p.backoff_s(1, 0, rid) for rid in range(200)]
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        {"max_attempts": 0},
+        {"backoff_mult": 0.0},
+        {"backoff_base_s": -1.0},
+        {"jitter_frac": 1.0},
+        {"jitter_frac": -0.1},
+    ],
+)
+def test_retry_policy_validates(kwargs):
+    with pytest.raises(ResilienceConfigError):
+        RetryPolicy(**kwargs)
+
+
+def test_hedge_and_breaker_configs_validate():
+    with pytest.raises(ResilienceConfigError):
+        HedgePolicy(p99_factor=0.0)
+    with pytest.raises(ResilienceConfigError):
+        HedgePolicy(max_hedges=0)
+    with pytest.raises(ResilienceConfigError):
+        BreakerConfig(trip_after=0)
+    with pytest.raises(ResilienceConfigError):
+        BreakerConfig(cooldown_s=-1.0)
+
+
+# -------------------------------------------------------------- breaker ---
+
+
+def test_breaker_trips_after_consecutive_faults_only():
+    br = SignatureBreaker(BreakerConfig(trip_after=3, cooldown_s=10.0))
+    k = _key()
+    br.on_result(k, fault=True, probe=False, now=1.0)
+    br.on_result(k, fault=True, probe=False, now=2.0)
+    br.on_result(k, fault=False, probe=False, now=3.0)  # resets the streak
+    br.on_result(k, fault=True, probe=False, now=4.0)
+    br.on_result(k, fault=True, probe=False, now=5.0)
+    assert br.trips == 0 and br.peek_rung(k, 5.0) == 0
+    br.on_result(k, fault=True, probe=False, now=6.0)  # third consecutive
+    assert br.trips == 1
+    assert br.peek_rung(k, 6.0) == 1
+    assert br.open_signature_labels() == ["streaming/xla/fp32/32x32x32"]
+
+
+def test_breaker_half_open_probe_restores_or_reopens():
+    br = SignatureBreaker(BreakerConfig(trip_after=1, cooldown_s=10.0))
+    k = _key()
+    br.on_result(k, fault=True, probe=False, now=0.0)
+    assert br.effective_rung(k, 5.0) == (1, False)  # still cooling down
+    # cooldown elapsed: exactly ONE probe slot at the base rung
+    rung, probe = br.effective_rung(k, 10.0)
+    assert (rung, probe) == (0, True)
+    assert br.effective_rung(k, 10.0) == (1, False)  # slot already claimed
+    # probe fails -> re-open for a fresh cooldown
+    br.on_result(k, fault=True, probe=True, now=11.0)
+    assert br.effective_rung(k, 15.0) == (1, False)
+    # second probe succeeds -> fast path fully restored
+    rung, probe = br.effective_rung(k, 21.0)
+    assert (rung, probe) == (0, True)
+    br.on_result(k, fault=False, probe=True, now=22.0)
+    assert br.restores == 1
+    assert br.effective_rung(k, 23.0) == (0, False)
+    assert br.open_signature_labels() == []
+    states = [tr["state"] for tr in br.transitions]
+    assert states == ["open", "half_open", "open", "half_open", "closed"]
+
+
+def test_breaker_peek_does_not_claim_probe_slot():
+    br = SignatureBreaker(BreakerConfig(trip_after=1, cooldown_s=1.0))
+    k = _key()
+    br.on_result(k, fault=True, probe=False, now=0.0)
+    assert br.peek_rung(k, 2.0) == 0  # a probe WOULD run...
+    assert br.peek_rung(k, 2.0) == 0  # ...and peeking again still says so
+    assert br.effective_rung(k, 2.0) == (0, True)  # claim
+    assert br.peek_rung(k, 2.0) == 1  # now the slot is taken
+
+
+def test_breaker_walks_repeated_trips_down_the_ladder():
+    br = SignatureBreaker(BreakerConfig(trip_after=1, cooldown_s=1e9))
+    k = _key()
+    for i in range(3):
+        br.on_result(k, fault=True, probe=False, now=float(i))
+    assert br.trips == 3
+    assert br.peek_rung(k, 3.0) == 3
+
+
+# ----------------------------------------------------------------- ladder ---
+
+
+def test_demote_rung_walks_executor_ladder_then_mode():
+    from repro.serving.scheduler import GroupKey
+    from repro.serving.simulator import reference_engine
+
+    engine = reference_engine()
+    work = (engine.cfg.cube + 2 * engine.cfg.overlap,) * 3
+    key = GroupKey(mode="full", executor="pallas_fused", devices=None,
+                   precision="fp32", shape=work)
+    seen = [(key.mode, key.executor)]
+    while True:
+        key = demote_rung(key, engine)
+        if key is None:
+            break
+        seen.append((key.mode, key.executor))
+    modes = [m for m, _ in seen]
+    # executor rungs first, then exactly one mode demotion to the failsafe
+    assert modes[-1] == "subvolume"
+    assert modes.count("subvolume") == 1
+    execs = [e for m, e in seen if m != "subvolume"]
+    order = [LADDER.index(e) for e in execs if e in LADDER]
+    assert order == sorted(order) and len(set(order)) == len(order)
+
+
+# ------------------------------------------------------------ fault plans ---
+
+
+def test_fault_plan_is_pure_and_first_match_wins():
+    plan = FaultPlan(seed=3, rules=(
+        FaultRule(kind="permanent", rate=1.0, executor_substr="xla"),
+        FaultRule(kind="transient", rate=1.0),
+    ))
+    k = _key(executor="xla")
+    d = plan.decide(t=1.0, replica=0, key=k, request_id=5, attempt=0)
+    assert d.kind == "permanent" and d.rule_index == 0
+    # same identity -> same verdict, forever
+    assert plan.decide(t=1.0, replica=0, key=k, request_id=5, attempt=0) == d
+    # a non-matching signature falls through to the later rule
+    d2 = plan.decide(t=1.0, replica=0, key=_key(executor="streaming"),
+                     request_id=5, attempt=0)
+    assert d2.kind == "transient" and d2.rule_index == 1
+
+
+def test_fault_plan_windows_and_rate_coin():
+    plan = FaultPlan(seed=0, rules=(
+        FaultRule(kind="transient", rate=0.5, t0=10.0, t1=20.0),
+    ))
+    k = _key()
+    assert plan.decide(t=5.0, replica=0, key=k, request_id=1, attempt=0) is None
+    assert plan.decide(t=20.0, replica=0, key=k, request_id=1, attempt=0) is None
+    hits = sum(
+        plan.decide(t=15.0, replica=0, key=k, request_id=r, attempt=0)
+        is not None
+        for r in range(1000)
+    )
+    assert 400 < hits < 600  # the seeded coin respects the rate
+    # retried attempts re-roll: SOME faulted first attempts pass on retry
+    rerolls = sum(
+        plan.decide(t=15.0, replica=0, key=k, request_id=r, attempt=0)
+        is not None
+        and plan.decide(t=15.0, replica=0, key=k, request_id=r, attempt=1)
+        is None
+        for r in range(1000)
+    )
+    assert rerolls > 100
+
+
+def test_fault_rule_validates():
+    with pytest.raises(ResilienceConfigError):
+        FaultRule(kind="gremlin")
+    with pytest.raises(ResilienceConfigError):
+        FaultRule(kind="transient", rate=1.5)
+    with pytest.raises(ResilienceConfigError):
+        FaultRule(kind="straggler", slow_factor=0.5)
+
+
+def test_stuck_faults_require_timeouts_everywhere():
+    from repro.serving.simulator import SimConfig, reference_engine, simulate
+
+    cfg = SimConfig(
+        horizon_s=30.0,
+        fault_plan=FaultPlan(seed=0, rules=(FaultRule(kind="stuck", rate=0.01),)),
+        resilience=ResiliencePolicy(service_timeout_s={"interactive": 5.0}),
+    )
+    with pytest.raises(ResilienceConfigError, match="stuck"):
+        simulate(reference_engine(), cfg)
+
+
+# ------------------------------------------------- scheduler integration ---
+
+
+def _sim(rules, policy, horizon_s=240.0, seed=0):
+    from repro.serving.simulator import preset, reference_engine, simulate
+
+    cfg = dataclasses.replace(
+        preset("steady", seed=seed, horizon_s=horizon_s),
+        resilience=policy,
+        fault_plan=FaultPlan(seed=seed, rules=tuple(rules)),
+    )
+    return simulate(reference_engine(), cfg)
+
+
+def test_transient_faults_recover_via_retry():
+    rep = _sim(
+        [FaultRule(kind="transient", rate=0.15)],
+        ResiliencePolicy(retry=RetryPolicy(max_attempts=3, seed=0),
+                         breaker=None),
+    )
+    s = rep.summary()
+    r = s["resilience"]
+    assert s["requests"]["conserved"] is True
+    assert r["faults"]["transient"] > 0
+    assert r["retries"] > 0
+    assert r["recovery_rate"] >= 0.9
+    # every terminal completion is unique per request id
+    ids = [c.id for c in rep.completions]
+    assert len(ids) == len(set(ids))
+
+
+def test_retry_preserves_original_arrival_identity():
+    """wait + service == finish - arrival must hold on EVERY attempt —
+    retried attempts keep the original arrival stamp, so queue age
+    travels with the request through its backoff."""
+    rep = _sim(
+        [FaultRule(kind="transient", rate=0.2)],
+        ResiliencePolicy(retry=RetryPolicy(max_attempts=4, seed=1),
+                         breaker=None),
+        seed=1,
+    )
+    retried = [r for r in rep.scheduler.engine.log.records if r.attempt > 0]
+    assert retried, "scenario produced no retried attempts"
+    for rec in retried:
+        assert rec.queue_wait_s + rec.service_s == pytest.approx(
+            (rec.queue_wait_s + rec.arrival_s + rec.service_s) - rec.arrival_s
+        )
+        # a retry cannot start before its backoff gate: wait covers it
+        assert rec.queue_wait_s > 0.0
+
+
+def test_permanent_faults_never_retry():
+    rep = _sim(
+        [FaultRule(kind="permanent", rate=0.1)],
+        ResiliencePolicy(retry=RetryPolicy(max_attempts=5, seed=0),
+                         breaker=None),
+    )
+    r = rep.summary()["resilience"]
+    assert r["faults"]["permanent"] > 0
+    assert r["retries"] == 0
+    assert r["recovery_rate"] == 0.0
+
+
+def test_timeouts_reap_stuck_members_and_retry():
+    rep = _sim(
+        [FaultRule(kind="stuck", rate=0.05)],
+        ResiliencePolicy(
+            retry=RetryPolicy(max_attempts=3, seed=0),
+            service_timeout_s={"interactive": 5.0, "standard": 5.0,
+                               "batch": 5.0},
+            breaker=None,
+        ),
+    )
+    s = rep.summary()
+    r = s["resilience"]
+    assert s["requests"]["conserved"] is True
+    assert r["faults"]["timeout"] > 0
+    # a timed-out attempt is charged exactly the class bound
+    timed = [
+        rec for rec in rep.scheduler.engine.log.records
+        if rec.fail_type == SERVICE_TIMEOUT
+    ]
+    assert timed and all(rec.service_s == 5.0 for rec in timed)
+    assert r["recovery_rate"] >= 0.9  # the stuck coin re-rolls per attempt
+
+
+def test_breaker_demotes_poisoned_signature_to_serving_rung():
+    rep = _sim(
+        [FaultRule(kind="permanent", rate=1.0, executor_substr="xla",
+                   shape=(32, 32, 32), precision="int8w")],
+        ResiliencePolicy(
+            retry=RetryPolicy(max_attempts=2, seed=0),
+            breaker=BreakerConfig(trip_after=3, cooldown_s=1e6),
+        ),
+        horizon_s=600.0,
+    )
+    s = rep.summary()
+    r = s["resilience"]
+    assert r["breaker"]["trips"] >= 1
+    assert "streaming/xla/int8w/32x32x32" in r["breaker"]["open_signatures"]
+    # after the trip, requests of the poisoned signature COMPLETE at the
+    # demoted rung (xla -> streaming): that is what degradation buys
+    assert r["rungs"].get("streaming/streaming", 0) > 0
+    # and the storm stopped failing once demoted: late permanent faults
+    # stop accumulating (cooldown is effectively infinite => no probes)
+    assert r["breaker"]["probes"] == 0
+    assert s["requests"]["conserved"] is True
+
+
+def test_breaker_half_open_probe_restores_after_window():
+    rep = _sim(
+        [FaultRule(kind="permanent", rate=1.0, executor_substr="xla",
+                   shape=(32, 32, 32), precision="int8w", t1=120.0)],
+        ResiliencePolicy(
+            retry=RetryPolicy(max_attempts=2, seed=0),
+            breaker=BreakerConfig(trip_after=3, cooldown_s=60.0),
+        ),
+        horizon_s=600.0,
+    )
+    r = rep.summary()["resilience"]
+    assert r["breaker"]["trips"] >= 1
+    assert r["breaker"]["probes"] >= 1
+    # the fault window closed at t=120: a later probe restores the rung
+    assert r["breaker"]["restores"] >= 1
+    assert r["breaker"]["open_signatures"] == []
+    states = [tr["state"] for tr in r["breaker"]["transitions"]]
+    assert "closed" in states
+
+
+def test_resilience_summary_reconstructs_from_telemetry():
+    from repro.telemetry.analysis import resilience_summary
+
+    rep = _sim(
+        [FaultRule(kind="transient", rate=0.15)],
+        ResiliencePolicy(retry=RetryPolicy(max_attempts=3, seed=0),
+                         breaker=None),
+    )
+    s = rep.summary()["resilience"]
+    rs = resilience_summary(rep.scheduler.engine.log.records)
+    # the attempt stream alone reproduces the scheduler's own counters
+    assert rs.retries == s["retries"]
+    assert rs.faults["transient_fault"] == s["faults"]["transient"]
+    assert rs.faulted_requests == s["faulted_requests"]
+    assert rs.recovered_requests == s["recovered_requests"]
+    assert rs.recovery_rate == pytest.approx(s["recovery_rate"], abs=1e-4)
+
+
+def test_plain_run_has_no_resilience_block():
+    """Without a policy or plan the summary must stay EXACTLY the PR 5/6
+    shape — that is what keeps the committed goldens byte-identical."""
+    from repro.serving.simulator import preset, reference_engine, simulate
+
+    rep = simulate(reference_engine(), preset("steady", horizon_s=60.0))
+    assert "resilience" not in rep.summary()
+
+
+# ------------------------------------------------------ fault-storm golden ---
+
+
+def _golden():
+    with open(os.path.join(GOLDEN_DIR, "fleet_faultstorm.json")) as f:
+        return json.load(f)
+
+
+def _fresh_faultstorm():
+    from repro.serving.fleet import fleet_preset, simulate_fleet
+
+    return simulate_fleet(fleet_preset("fleet_faultstorm", seed=0)).summary()
+
+
+def test_faultstorm_golden_trace_matches():
+    golden = _golden()
+    fresh = _fresh_faultstorm()
+    assert json.dumps(fresh, sort_keys=True) == json.dumps(golden, sort_keys=True), (
+        "fleet_faultstorm diverged from its golden trace; fresh summary:\n"
+        + json.dumps(fresh, indent=1, sort_keys=True)
+    )
+
+
+def test_faultstorm_golden_acceptance_claims():
+    """The ISSUE's acceptance list, pinned against the committed trace:
+    a seeded storm (>=5% transients, a straggler replica, a poisoned
+    signature) where retries recover >=90% of transients, the breaker
+    demotes the poisoned signature to a rung that SERVES, and the ledger
+    proves zero lost / zero double-served."""
+    g = _golden()
+    req = g["requests"]
+    r = g["resilience"]
+    # zero lost: every arrival has exactly one terminal outcome
+    assert req["conserved"] is True
+    assert req["served_twice"] == 0
+    assert req["arrived"] == (
+        req["refused"] + req["no_replica"] + req["completed"]
+        + req["demoted"] + sum(req["rejected"].values())
+    )
+    # the storm was real and recovery beat the bar
+    assert r["faults"]["transient"] > 0.05 * req["arrived"] * 0.5
+    assert r["retries"] > 0
+    assert r["recovery_rate"] >= 0.9
+    # the poisoned signature tripped its breakers and now serves demoted
+    assert r["breaker"]["trips"] >= 1
+    assert any("xla/int8w/32x32x32" in s for s in r["breaker"]["open_signatures"])
+    assert r["rungs"].get("streaming/streaming", 0) > 0
+    # hedging engaged against the straggler replica
+    assert r["hedges"] > 0
+    assert r["hedge_cancelled"] + r["hedge_wins"] > 0
+    # per-replica ledgers balance (hedge losers count as evacuations)
+    for rep in g["per_replica"]:
+        assert rep["admitted"] == (
+            rep["completed"] + rep["demoted"] + rep["rejected"]
+            + rep["evacuated"]
+        ), f"replica {rep['id']} ledger does not balance"
+
+
+def test_faultstorm_is_deterministic():
+    assert json.dumps(_fresh_faultstorm(), sort_keys=True) == json.dumps(
+        _fresh_faultstorm(), sort_keys=True
+    )

@@ -1,0 +1,347 @@
+"""Property suite for the resilience layer under arbitrary seeded fault
+storms — the invariants that keep retries, timeouts, breakers, and
+hedging from corrupting the PR 5/6 conservation guarantees:
+
+  * **conservation under faults**: whatever the FaultPlan injects
+    (transient storms, poisoned signatures, stragglers, stuck members)
+    and however many retries/hedges/re-dispatches happen, every arrival
+    still reaches exactly ONE terminal ledger outcome and every
+    replica's own ledger balances;
+  * **exactly-once under hedge races**: a hedged request has two live
+    copies racing on two replicas — whichever wins, ``completions_seen
+    <= 1`` on every entry (the loser is cancelled via the ledger, even
+    when a crash evacuates one copy mid-race);
+  * **arrival-stamp preservation**: ``queue_wait_s + service_s ==
+    finish - ORIGINAL arrival`` exactly, on every attempt of every
+    request — retries (backoff included) and crash re-dispatches both
+    carry the original arrival, so SLO math never flatters a failure;
+  * **determinism**: same (code, seed) -> byte-identical summaries with
+    faults, breakers, and hedging all active.
+
+Same double-drive structure as tests/test_fleet_properties.py: each
+``_check_*`` body runs under hypothesis when importable (CI) AND under
+an always-on deterministic grid (bare installs never skip)."""
+
+import pytest
+
+from repro.serving.fleet import (
+    FleetConfig,
+    FleetEvent,
+    FleetServiceModel,
+    simulate_fleet,
+)
+from repro.serving.resilience import (
+    BreakerConfig,
+    FaultPlan,
+    FaultRule,
+    HedgePolicy,
+    ResiliencePolicy,
+    RetryPolicy,
+)
+from repro.serving.scheduler import PriorityClass, SchedulerConfig
+from repro.serving.simulator import STANDARD_MIX
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: the grid fallback below still runs
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _storm_cfg(
+    seed,
+    rate,
+    replicas,
+    transient_rate,
+    stuck_rate,
+    poison=True,
+    hedge=False,
+    crash_t=None,
+    trip_after=3,
+    cooldown_s=30.0,
+    horizon_s=90.0,
+):
+    """A fleet under a seeded storm: tunable transient noise, an
+    optionally poisoned signature, a straggler replica, rare stuck
+    members — with retries, timeouts, a breaker, and optional aggressive
+    hedging all active."""
+    rules = [FaultRule(kind="transient", rate=transient_rate)]
+    if poison:
+        rules.append(
+            FaultRule(kind="permanent", rate=1.0, executor_substr="xla",
+                      shape=(32, 32, 32), precision="int8w")
+        )
+    if replicas > 1:
+        rules.append(
+            FaultRule(kind="straggler", rate=1.0, replica=replicas - 1,
+                      slow_factor=5.0)
+        )
+    if stuck_rate > 0:
+        rules.append(FaultRule(kind="stuck", rate=stuck_rate))
+    events = ()
+    if crash_t is not None and replicas > 1:
+        events = (FleetEvent(t=crash_t, action="crash", replica=replicas // 2),)
+    return FleetConfig(
+        name="resilience-prop",
+        seed=seed,
+        horizon_s=horizon_s,
+        process="poisson",
+        process_kwargs={"rate_hz": rate},
+        mix=STANDARD_MIX,
+        replicas=replicas,
+        policy="cache_affinity",
+        scheduler=SchedulerConfig(
+            max_queue_depth=32,
+            admission_hbm_bytes=512 * 1024 * 1024,
+            max_batch_requests=4,
+            native_shapes=True,
+            classes={
+                "interactive": PriorityClass("interactive", 0, deadline_s=None),
+                "standard": PriorityClass("standard", 1, deadline_s=None),
+                "batch": PriorityClass("batch", 2, deadline_s=None),
+            },
+        ),
+        service=FleetServiceModel(base_s=0.05, batch_overhead_s=0.02),
+        events=events,
+        resilience=ResiliencePolicy(
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.05, seed=seed),
+            service_timeout_s={"interactive": 2.0, "standard": 4.0,
+                               "batch": 8.0},
+            # aggressive hedging when asked: hedge almost immediately so
+            # the race window is exercised hard, not occasionally
+            hedge=HedgePolicy(p99_factor=1.0, min_age_s=0.05, min_samples=5,
+                              window=50, max_hedges=1) if hedge else None,
+            breaker=BreakerConfig(trip_after=trip_after, cooldown_s=cooldown_s),
+        ),
+        fault_plan=FaultPlan(seed=seed, rules=tuple(rules)),
+    )
+
+
+# ------------------------------------------------------ invariant bodies ---
+
+
+def _check_conservation_under_faults(seed, rate, replicas, transient_rate,
+                                     stuck_rate, hedge, crash_t):
+    """The load-balancing conservation law survives the full storm:
+    every arrival gets exactly one terminal outcome, per-replica ledgers
+    balance (hedge losers and crash evacuations both count as
+    evacuations), and admissions exceed unique admissions by exactly the
+    re-dispatches plus the hedge copies."""
+    rep = simulate_fleet(_storm_cfg(seed, rate, replicas, transient_rate,
+                                    stuck_rate, hedge=hedge, crash_t=crash_t))
+    fl = rep.fleet
+    assert fl.conserved()
+    for r in fl.replicas:
+        assert r.sched.stats.conserved(), f"replica {r.id}: {r.sched.stats}"
+    s = rep.summary()
+    req = s["requests"]
+    unique_terminal = (
+        req["refused"]
+        + req["no_replica"]
+        + req["completed"]
+        + req["demoted"]
+        + sum(req["rejected"].values())
+    )
+    assert req["arrived"] == unique_terminal
+    assert req["admitted"] == (
+        req["arrived"] - req["refused"] - req["no_replica"]
+        + req["redispatched"] + s["resilience"]["hedges"]
+    )
+
+
+def _check_exactly_once_under_hedge_races(seed, rate, replicas, crash_t):
+    """Hedge copies race; crashes evacuate copies mid-race; breakers trip
+    mid-batch. Whatever wins, no ledger entry is ever served twice, and
+    every served entry was served exactly once."""
+    rep = simulate_fleet(_storm_cfg(seed, rate, replicas, 0.1, 0.003,
+                                    hedge=True, crash_t=crash_t))
+    fl = rep.fleet
+    assert all(e.completions_seen <= 1 for e in fl.ledger)
+    served = [e for e in fl.ledger if e.outcome in ("completed", "demoted")]
+    assert all(e.completions_seen == 1 for e in served)
+    # no orphaned copies: every surviving copy belongs to an unserved
+    # entry (served entries cancel their twins on the spot)
+    for e in served:
+        for (rid, lid) in e.copies:
+            r = next((x for x in fl.replicas if x.id == rid), None)
+            assert r is None or not r.live or all(
+                q.id != lid for q in r.sched.queue
+            ), "served entry left a live queued copy behind"
+
+
+def _check_arrival_stamp_preserved(seed, rate, replicas, transient_rate,
+                                   crash_t):
+    """wait + service == finish - ORIGINAL arrival exactly, for every
+    attempt record of every request — across retries (whose backoff
+    shows up as queue wait, never as forgiven age) and across crash
+    re-dispatches (the dead replica's lost time is charged too)."""
+    rep = simulate_fleet(_storm_cfg(seed, rate, replicas, transient_rate,
+                                    0.0, crash_t=crash_t))
+    fl = rep.fleet
+    arrival_of = {}
+    for e in fl.ledger:
+        if e.outcome in ("completed", "demoted"):
+            rec = e.completion.record
+            assert rec.arrival_s == e.arrival_s  # original, not re-submit time
+            assert rec.queue_wait_s + rec.service_s == pytest.approx(
+                e.finish_s - e.arrival_s, abs=1e-9
+            )
+            arrival_of[(rec.replica_id, rec.request_id)] = e.arrival_s
+    # every intermediate attempt carries the same original arrival
+    retried = [
+        r
+        for repl in fl.replicas
+        for r in repl.sched.engine.log.records
+        if r.attempt and r.attempt > 0 and r.request_id is not None
+    ]
+    for rec in retried:
+        key = (rec.replica_id, rec.request_id)
+        if key in arrival_of:
+            assert rec.arrival_s == arrival_of[key]
+    redispatched = [e for e in fl.ledger if e.dispatches > 1]
+    if crash_t is not None and replicas > 1:
+        assert redispatched or fl.redispatched == 0
+
+
+def _check_storm_determinism(seed, replicas, hedge, crash_t):
+    """Same (code, seed) -> byte-identical storm summaries, with faults,
+    breakers, and hedging all live."""
+    runs = [
+        simulate_fleet(
+            _storm_cfg(seed, 6.0, replicas, 0.1, 0.002, hedge=hedge,
+                       crash_t=crash_t)
+        ).to_json()
+        for _ in range(2)
+    ]
+    assert runs[0] == runs[1]
+
+
+def _check_breaker_trips_mid_batch_conserve(seed, rate):
+    """A poisoned signature tripping its breaker mid-trace (including
+    mid-batch: its group members re-form at the demoted rung on the next
+    batch) never breaks conservation, and the demoted rung actually
+    serves what the poisoned rung could not."""
+    rep = simulate_fleet(_storm_cfg(seed, rate, 2, 0.0, 0.0, poison=True,
+                                    trip_after=1, cooldown_s=1e9,
+                                    horizon_s=120.0))
+    fl = rep.fleet
+    assert fl.conserved()
+    s = rep.summary()
+    r = s["resilience"]
+    if r["faults"]["permanent"] > 0:
+        assert r["breaker"]["trips"] >= 1
+        # demotion reached a rung that completes requests
+        assert r["rungs"].get("streaming/streaming", 0) > 0
+
+
+# ------------------------------------------------- hypothesis exploration ---
+
+if HAVE_HYPOTHESIS:
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(2.0, 10.0),
+        replicas=st.integers(1, 4),
+        transient_rate=st.floats(0.0, 0.3),
+        stuck_rate=st.floats(0.0, 0.01),
+        hedge=st.booleans(),
+        crash_t=st.one_of(st.none(), st.floats(10.0, 60.0)),
+    )
+    def test_conservation_under_faults(seed, rate, replicas, transient_rate,
+                                       stuck_rate, hedge, crash_t):
+        _check_conservation_under_faults(seed, rate, replicas, transient_rate,
+                                         stuck_rate, hedge, crash_t)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(4.0, 12.0),
+        replicas=st.integers(2, 4),
+        crash_t=st.one_of(st.none(), st.floats(10.0, 60.0)),
+    )
+    def test_exactly_once_under_hedge_races(seed, rate, replicas, crash_t):
+        _check_exactly_once_under_hedge_races(seed, rate, replicas, crash_t)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(2.0, 8.0),
+        replicas=st.integers(2, 4),
+        transient_rate=st.floats(0.05, 0.3),
+        crash_t=st.one_of(st.none(), st.floats(10.0, 60.0)),
+    )
+    def test_arrival_stamp_preserved(seed, rate, replicas, transient_rate,
+                                     crash_t):
+        _check_arrival_stamp_preserved(seed, rate, replicas, transient_rate,
+                                       crash_t)
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        replicas=st.integers(1, 3),
+        hedge=st.booleans(),
+        crash_t=st.one_of(st.none(), st.floats(10.0, 60.0)),
+    )
+    def test_storm_determinism(seed, replicas, hedge, crash_t):
+        _check_storm_determinism(seed, replicas, hedge, crash_t)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), rate=st.floats(2.0, 8.0))
+    def test_breaker_trips_mid_batch_conserve(seed, rate):
+        _check_breaker_trips_mid_batch_conserve(seed, rate)
+
+
+# ------------------------------------------------- deterministic fallback ---
+
+
+class TestGridFallback:
+    """Pinned corners of the fault-storm property space — always
+    executed, with or without hypothesis, so no environment silently
+    skips the resilience invariants."""
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,transient_rate,stuck_rate,hedge,crash_t",
+        [
+            (0, 4.0, 1, 0.15, 0.0, False, None),
+            (1, 8.0, 3, 0.1, 0.005, True, 30.0),
+            (2, 6.0, 4, 0.25, 0.0, True, None),
+            (3, 10.0, 2, 0.05, 0.01, False, 20.0),
+        ],
+    )
+    def test_conservation_under_faults(self, seed, rate, replicas,
+                                       transient_rate, stuck_rate, hedge,
+                                       crash_t):
+        _check_conservation_under_faults(seed, rate, replicas, transient_rate,
+                                         stuck_rate, hedge, crash_t)
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,crash_t",
+        [(0, 8.0, 3, None), (1, 10.0, 2, 25.0), (2, 6.0, 4, 45.0)],
+    )
+    def test_exactly_once_under_hedge_races(self, seed, rate, replicas,
+                                            crash_t):
+        _check_exactly_once_under_hedge_races(seed, rate, replicas, crash_t)
+
+    @pytest.mark.parametrize(
+        "seed,rate,replicas,transient_rate,crash_t",
+        [(0, 4.0, 2, 0.2, None), (1, 6.0, 3, 0.1, 30.0)],
+    )
+    def test_arrival_stamp_preserved(self, seed, rate, replicas,
+                                     transient_rate, crash_t):
+        _check_arrival_stamp_preserved(seed, rate, replicas, transient_rate,
+                                       crash_t)
+
+    @pytest.mark.parametrize(
+        "seed,replicas,hedge,crash_t",
+        [(0, 2, True, None), (5, 3, False, 25.0)],
+    )
+    def test_storm_determinism(self, seed, replicas, hedge, crash_t):
+        _check_storm_determinism(seed, replicas, hedge, crash_t)
+
+    @pytest.mark.parametrize("seed,rate", [(0, 4.0), (7, 6.0)])
+    def test_breaker_trips_mid_batch_conserve(self, seed, rate):
+        _check_breaker_trips_mid_batch_conserve(seed, rate)

@@ -193,7 +193,7 @@ class TestModeledExecution:
         b = sched.next_batch(now=0.0)
         assert len(b.requests) == 1  # garbage never groups
         sched.run_batch(b)
-        assert sched.completions[0].record.fail_type == "executor_error"
+        assert sched.completions[0].record.fail_type == "permanent_fault"
 
 
 class TestOrdering:

@@ -267,7 +267,10 @@ class TestServingFaults:
         monkeypatch.setattr(pipeline, "run", flaky_run)
         results = engine.submit_many(vols)
         assert [r.record.status for r in results] == ["ok", "fail", "ok"]
-        assert results[1].record.fail_type == "executor_error"
+        # an unclassified RuntimeError is conservatively permanent
+        # (serving/errors.py classify): retrying an unknown fault burns
+        # capacity exactly when the service is least healthy
+        assert results[1].record.fail_type == "permanent_fault"
         assert "injected executor fault" in results[1].record.extra["error"]
         assert results[1].segmentation is None
         for i in (0, 2):
@@ -279,7 +282,7 @@ class TestServingFaults:
         batch = [vols[0], jnp.zeros((7,)), vols[1]]  # 1-D garbage mid-batch
         results = engine.submit_many(batch)
         assert [r.record.status for r in results] == ["ok", "fail", "ok"]
-        assert results[1].record.fail_type == "executor_error"
+        assert results[1].record.fail_type == "permanent_fault"
         # the fleet ledger conserved: all three requests have records
         assert len(engine.log.records) == 3
 
@@ -367,7 +370,7 @@ class TestFleetFaults:
         )
         records = [e.completion.record for e in served]
         assert [r.status for r in records] == ["ok", "fail", "ok", "ok"]
-        assert records[1].fail_type == "executor_error"
+        assert records[1].fail_type == "permanent_fault"
         assert "injected replica fault" in records[1].extra["error"]
         # the fault stayed on the replica that served it; both replicas
         # still completed their groups
