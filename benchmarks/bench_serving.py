@@ -1,10 +1,12 @@
 """Serving-tier load benchmark: drive the continuous-batching scheduler
 through the three committed traffic scenarios on the deterministic
 virtual-clock simulator (src/repro/serving/simulator.py), and the
-replicated fleet (src/repro/serving/fleet.py) through the five committed
-fleet scenarios (the fifth, ``fleet_faultstorm``, runs the seeded fault
-storm under the full resilience policy and also feeds the gated
-``serving_resilience`` BENCH section via ``bench_resilience()``).
+replicated fleet (src/repro/serving/fleet.py) through the six committed
+fleet scenarios (``fleet_faultstorm`` runs the seeded fault storm under
+the full resilience policy and feeds the gated ``serving_resilience``
+BENCH section via ``bench_resilience()``; ``fleet_cached`` runs the
+Zipf-skewed artifact-cache storm and feeds the gated ``serving_cache``
+section via ``bench_cache()``).
 
 Every number here is *virtual-clock*, derived from seeded arrivals and
 the modeled-bytes service model — two runs with the same seed are
@@ -197,41 +199,123 @@ def bench_resilience(seed: int = 0) -> list:
     ]
 
 
-def soak(horizon_s: float, seed: int = 0, fault_rate: float = 0.0) -> int:
+def bench_cache(seed: int = 0) -> list:
+    """(name, us_per_call, hbm_bytes_modeled, note) rows for the gated
+    BENCH_2.json ``serving_cache`` section — the artifact-cache
+    acceptance scenario (fleet_cached: Zipf(1.1) content skew, 2%
+    corrupt-entry faults, a 60 s cache outage) reduced to deterministic
+    lower-is-better virtual keys:
+
+      * ``miss_pct``: content misses per 100 consults — growth means the
+        cache stopped earning its bytes;
+      * ``quarantined_served``: corrupt bytes SERVED. The baseline pins
+        this at 0 and check_regression fails any virtual key growing
+        from zero, so a single served-corrupt artifact fails CI;
+      * ``uncollapsed``: in-flight hits that did NOT coalesce — growth
+        means single-flight stampede collapsing broke;
+      * the storm's e2e latency tail.
+
+    Hit rate / coalesced / quarantine counts ride in the notes column."""
+    s = run_fleet_scenarios(["fleet_cached"], seed=seed)["fleet_cached"]
+    c = s["cache"]
+    note = (
+        f"hit_rate={c['hit_rate']};coalesced={c['coalesced']}"
+        f";quarantined={c['quarantined']};evictions={c['evictions']}"
+        f";breaker_trips={c['breaker_trips']}"
+    )
+    return [
+        (
+            "cache_miss_pct",
+            100.0 * c["misses"] / max(c["lookups"], 1),
+            None,
+            note,
+        ),
+        (
+            "cache_quarantined_served",
+            float(c["quarantined_served"]),
+            None,
+            "acceptance: corrupt bytes are NEVER served (pinned 0)",
+        ),
+        (
+            "cache_uncollapsed",
+            float(c["inflight_hits"] - c["coalesced"]),
+            None,
+            "acceptance: every same-replica in-flight hit coalesces",
+        ),
+        (
+            "cache_lost",
+            float(
+                s["requests"]["arrived"]
+                - s["requests"]["refused"]
+                - s["requests"]["no_replica"]
+                - s["requests"]["completed"]
+                - s["requests"]["demoted"]
+                - sum(s["requests"]["rejected"].values())
+                - c["coalesced"]
+            ),
+            None,
+            "acceptance: zero lost requests (coalesced is terminal)",
+        ),
+        ("cache_storm_p99", s["latency_ms"]["p99"] * 1e3, None, note),
+    ]
+
+
+def soak(
+    horizon_s: float,
+    seed: int = 0,
+    fault_rate: float = 0.0,
+    content_skew: float | None = None,
+) -> int:
     """The CI soak: one long virtual window of the overload scenario.
     Asserts the hard serving invariants — conservation (zero lost
     requests), typed shedding under overload, and a priority-protected
     interactive tail — and prints the summary. With ``--fault-rate`` the
     same window runs under a transient fault storm at that per-attempt
     rate plus the full resilience policy, and the JSON summary carries
-    the retry/breaker counters (the ``resilience`` block). Returns a
-    process exit code."""
-    if fault_rate > 0.0:
+    the retry/breaker counters (the ``resilience`` block). With
+    ``--content-skew`` the artifact cache fronts the scheduler and the
+    arrival stream draws Zipf-skewed content ids — the summary then
+    carries the ``cache`` block and the soak additionally asserts the
+    cache invariants (zero corrupt serves, conservation with coalesced
+    as a terminal state). Returns a process exit code."""
+    if fault_rate > 0.0 or content_skew is not None:
         import dataclasses
 
         from repro.serving import simulator as sim
-        from repro.serving.resilience import (
-            BreakerConfig,
-            FaultPlan,
-            FaultRule,
-            ResiliencePolicy,
-            RetryPolicy,
-        )
 
-        cfg = dataclasses.replace(
-            sim.preset("overload", seed=seed, horizon_s=horizon_s),
-            resilience=ResiliencePolicy(
-                retry=RetryPolicy(max_attempts=3, backoff_base_s=0.1,
-                                  seed=seed),
-                service_timeout_s={"interactive": 4.0, "standard": 8.0,
-                                   "batch": 20.0},
-                breaker=BreakerConfig(trip_after=3, cooldown_s=120.0),
-            ),
-            fault_plan=FaultPlan(
-                seed=seed,
-                rules=(FaultRule(kind="transient", rate=fault_rate),),
-            ),
-        )
+        cfg = sim.preset("overload", seed=seed, horizon_s=horizon_s)
+        if fault_rate > 0.0:
+            from repro.serving.resilience import (
+                BreakerConfig,
+                FaultPlan,
+                FaultRule,
+                ResiliencePolicy,
+                RetryPolicy,
+            )
+
+            cfg = dataclasses.replace(
+                cfg,
+                resilience=ResiliencePolicy(
+                    retry=RetryPolicy(max_attempts=3, backoff_base_s=0.1,
+                                      seed=seed),
+                    service_timeout_s={"interactive": 4.0, "standard": 8.0,
+                                       "batch": 20.0},
+                    breaker=BreakerConfig(trip_after=3, cooldown_s=120.0),
+                ),
+                fault_plan=FaultPlan(
+                    seed=seed,
+                    rules=(FaultRule(kind="transient", rate=fault_rate),),
+                ),
+            )
+        if content_skew is not None:
+            from repro.serving.cache import CacheConfig
+
+            cfg = dataclasses.replace(
+                cfg,
+                cache=CacheConfig(capacity_bytes=4 * 1024 * 1024),
+                content_skew=content_skew,
+                content_universe=128,
+            )
         s = sim.simulate(_engine(), cfg).summary()
     else:
         s = run_scenarios(["overload"], seed=seed, horizon_s=horizon_s)["overload"]
@@ -252,6 +336,24 @@ def soak(horizon_s: float, seed: int = 0, fault_rate: float = 0.0) -> int:
     if inter and inter["queue_wait_ms"]["p99"] > 5_000.0:
         print("SOAK FAIL: interactive p99 wait above 5 s", file=sys.stderr)
         ok = False
+    cache = s.get("cache")
+    if content_skew is not None:
+        if cache is None:
+            print("SOAK FAIL: content skew ran without a cache block",
+                  file=sys.stderr)
+            ok = False
+        else:
+            if cache["quarantined_served"] != 0:
+                print(
+                    f"SOAK FAIL: {cache['quarantined_served']} corrupt "
+                    "artifact(s) SERVED",
+                    file=sys.stderr,
+                )
+                ok = False
+            if cache["hit_rate"] <= 0.0:
+                print("SOAK FAIL: Zipf skew produced no cache hits",
+                      file=sys.stderr)
+                ok = False
     res = s.get("resilience")
     if fault_rate > 0.0:
         if res is None:
@@ -271,6 +373,12 @@ def soak(horizon_s: float, seed: int = 0, fault_rate: float = 0.0) -> int:
             f" retries={res['retries']} "
             f"faulted={res['faulted_requests']} "
             f"recovery_rate={res['recovery_rate']}"
+        )
+    if cache is not None:
+        tail += (
+            f" cache_hit_rate={cache['hit_rate']} "
+            f"coalesced={cache['coalesced']} "
+            f"quarantined={cache['quarantined']}"
         )
     print(f"\nsoak {'OK' if ok else 'FAILED'}: horizon={s['horizon_s']}s "
           f"arrived={req['arrived']} shed={shed} "
@@ -313,9 +421,24 @@ def main(argv=None) -> int:
         "rate under the full resilience policy; the JSON summary then "
         "carries the retry/breaker counters and recovery rate",
     )
+    ap.add_argument(
+        "--content-skew",
+        type=float,
+        default=None,
+        metavar="S",
+        help="with --soak: front the scheduler with the artifact cache "
+        "(serving/cache.py) and draw Zipf(S)-skewed content ids over a "
+        "128-volume universe; the soak then asserts the cache invariants "
+        "(zero corrupt serves, conservation with coalesced)",
+    )
     args = ap.parse_args(argv)
     if args.soak is not None:
-        return soak(args.soak, seed=args.seed, fault_rate=args.fault_rate)
+        return soak(
+            args.soak,
+            seed=args.seed,
+            fault_rate=args.fault_rate,
+            content_skew=args.content_skew,
+        )
 
     if args.fleet:
         from repro.serving import fleet as fl

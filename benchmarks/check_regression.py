@@ -63,7 +63,9 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 
 #: sections whose us_per_call is virtual-clock (deterministic simulator
 #: output): excluded from machine normalization, gated absolutely.
-VIRTUAL_SECTIONS = frozenset({"serving", "serving_fleet", "serving_resilience"})
+VIRTUAL_SECTIONS = frozenset(
+    {"serving", "serving_fleet", "serving_resilience", "serving_cache"}
+)
 
 
 def _load(path: str) -> dict:

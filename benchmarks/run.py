@@ -17,7 +17,7 @@ Sections:
                   load scenarios (steady / burst / overload) on the
                   deterministic serving simulator (bench_serving.py) —
                   bit-reproducible, gated absolutely (no machine norm)
-  [serving_fleet] virtual-clock p50/p99 of the five committed fleet
+  [serving_fleet] virtual-clock p50/p99 of the six committed fleet
                   scenarios (replicated schedulers + cache-affinity
                   router, serving/fleet.py), plus the overload acceptance
                   keys (interactive p99, queue-full refusals) — gated
@@ -26,6 +26,11 @@ Sections:
                   acceptance scenario (serving/resilience.py): unrecovered
                   faults, timeout reaps, lost/double-served (must stay 0),
                   and the storm's p99 — gated absolutely like [serving]
+  [serving_cache] lower-is-better virtual keys of the artifact-cache
+                  acceptance scenario (serving/cache.py): miss rate under
+                  Zipf skew, quarantined-served (must stay 0), uncollapsed
+                  stampedes, lost requests, and the cached storm's p99 —
+                  gated absolutely like [serving]
   [table2]        MeshNet vs U-Net: size + Dice on the synthetic GWM task
   [table4]        per-model pipeline stage timings
   [interventions] fleet-simulation tables V-VIII (patching/cropping/texture)
@@ -59,6 +64,7 @@ MEASURED_SECTIONS = (
     "serving",
     "serving_fleet",
     "serving_resilience",
+    "serving_cache",
 )
 
 
@@ -145,6 +151,19 @@ def run_serving_resilience() -> list:
     return rows
 
 
+def run_serving_cache() -> list:
+    from benchmarks import bench_serving
+
+    rows = bench_serving.bench_cache()
+    print("\n[serving_cache] name,us_per_call,hbm_bytes_modeled,derived")
+    print("# artifact-cache acceptance keys (seed 0): every key is lower-is-")
+    print("# better virtual-clock, gated ABSOLUTELY — growth means the cache")
+    print("# misses more, serves corrupt bytes, or stops collapsing stampedes")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
 def run_table2() -> None:
     from benchmarks import bench_paper_tables as T
 
@@ -224,6 +243,7 @@ SECTIONS = {
     "serving": run_serving,
     "serving_fleet": run_serving_fleet,
     "serving_resilience": run_serving_resilience,
+    "serving_cache": run_serving_cache,
     "table2": run_table2,
     "table4": run_table4,
     "interventions": run_interventions,

@@ -74,12 +74,45 @@ def rescale_intensity(vol: jax.Array, lo_q: float = 0.01, hi_q: float = 0.99) ->
     return jnp.clip(out, 0.0, 1.0)
 
 
+class DegenerateVolumeError(ValueError):
+    """The input volume has no intensity dynamic range — all-zero, a
+    constant fill, or nothing but non-finite voxels. The quantile
+    rescale would collapse it to a flat field and the network would
+    "segment" pure noise, so conform refuses it with a typed error the
+    pipeline converts into a failed telemetry record (never a crash):
+    the preprocessing analogue of the serving tier's typed fault
+    taxonomy."""
+
+    def __init__(self, lo: float, hi: float):
+        super().__init__(
+            "degenerate input volume: finite intensity range "
+            f"[{lo!r}, {hi!r}] has no dynamic range to conform"
+        )
+        self.lo = lo
+        self.hi = hi
+
+
 def conform(
     vol: jax.Array,
     out_shape: tuple[int, int, int] = (256, 256, 256),
     voxel_size=(1.0, 1.0, 1.0),
 ) -> jax.Array:
-    """Full conform: resample to cubic isotropic grid + intensity rescale."""
+    """Full conform: resample to cubic isotropic grid + intensity rescale.
+
+    Raises ``DegenerateVolumeError`` (host-side, before any resampling
+    compute) when a well-formed 3-D volume is constant / all-zero /
+    all-non-finite — the jitted stages stay jit-able; this wrapper is
+    the host entry point and may look at values. Malformed (non-3-D)
+    payloads are NOT intercepted: they fail in resample exactly as
+    before, so the serving tier's garbage-volume classification is
+    untouched."""
+    vol = jnp.asarray(vol, jnp.float32)
+    if vol.ndim == 3:
+        finite = jnp.where(jnp.isfinite(vol), vol, 0.0)
+        lo = float(jnp.min(finite))
+        hi = float(jnp.max(finite))
+        if not (hi - lo > 0.0):
+            raise DegenerateVolumeError(lo, hi)
     if vol.shape != out_shape:
         vol = resample(vol, out_shape, voxel_size)
-    return rescale_intensity(jnp.asarray(vol, jnp.float32))
+    return rescale_intensity(vol)

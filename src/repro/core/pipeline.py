@@ -84,6 +84,12 @@ class PipelineConfig:
     min_component_size: int = 64
     postprocess: bool = True
     budget: Optional[MemoryBudget] = None
+    # optional content-keyed memo for the conform stage (e.g.
+    # serving.cache.ConformMemo): any object with get(vol, out_shape) ->
+    # conformed-or-None and put(vol, out_shape, conformed). The memo holds
+    # the conformed [0, 1] volume *before* the precision cast, so one
+    # conform can feed requests running under different storage policies.
+    conform_memo: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -216,7 +222,13 @@ def run(
     try:
         # --- Stage 1: preprocessing (conform + precision cast) --------------
         t0 = _now()
-        x = conform_mod.conform(vol, cfg.volume_shape, voxel_size)
+        x = None
+        if cfg.conform_memo is not None:
+            x = cfg.conform_memo.get(vol, cfg.volume_shape)
+        if x is None:
+            x = conform_mod.conform(vol, cfg.volume_shape, voxel_size)
+            if cfg.conform_memo is not None:
+                cfg.conform_memo.put(vol, cfg.volume_shape, x)
         # The policy cast is conform's output write, not an inference
         # cost: the conformed [0, 1] volume leaves preprocessing in the
         # policy's storage dtype (int8-quantized under int8w — faithful
@@ -302,6 +314,18 @@ def run(
     except BudgetExceeded as e:
         rec.status = "fail"
         rec.fail_type = e.fail_type
+        return PipelineResult(segmentation=None, record=rec)
+    except conform_mod.DegenerateVolumeError:
+        # A well-formed 3-D volume with no intensity dynamic range
+        # (all-zero / constant / all-non-finite): conform refuses it
+        # host-side before any compute, and the never-raises contract
+        # turns that into a typed preprocessing failure. Malformed
+        # payloads (wrong rank) are NOT intercepted — they still blow up
+        # in resample and propagate, so the serving tier's
+        # garbage-volume classification is unchanged.
+        times.preprocessing = _now() - t0
+        rec.status = "fail"
+        rec.fail_type = "degenerate_volume"
         return PipelineResult(segmentation=None, record=rec)
     except ShardGeometryError:
         # The forward can still hit slab geometry the pre-flight could not

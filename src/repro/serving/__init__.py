@@ -1,16 +1,29 @@
 """Serving tier: engines (engine.py), the continuous-batching request
 scheduler (scheduler.py), the deterministic load simulator
 (simulator.py), the replicated fleet behind a cache-affinity router
-(fleet.py), and the resilience layer — typed faults, retry/backoff,
+(fleet.py), the resilience layer — typed faults, retry/backoff,
 timeouts, hedging, and the executor degradation ladder (errors.py,
-resilience.py). DESIGN.md §5-§7."""
+resilience.py) — and the content-addressed artifact cache with
+integrity quarantine, single-flight coalescing, and a fail-open
+breaker (cache.py). DESIGN.md §5-§8."""
 
+from repro.serving.cache import (  # noqa: F401
+    ArtifactCache,
+    CacheConfig,
+    CacheStats,
+    ConformMemo,
+    artifact_key,
+    content_hash,
+)
 from repro.serving.errors import (  # noqa: F401
     EXECUTION_FAULT_TYPES,
     PERMANENT_FAULT,
     RETRYABLE_FAIL_TYPES,
     SERVICE_TIMEOUT,
     TRANSIENT_FAULT,
+    CacheCorruptionError,
+    CacheFault,
+    CacheUnavailableError,
     ExecutorFault,
     FleetConfigError,
     NoReplicaAvailable,

@@ -64,6 +64,47 @@ class PermanentExecutorError(ExecutorFault):
     the signature one rung down the degradation ladder."""
 
 
+# ------------------------------------------------------------ cache faults ---
+
+
+class CacheFault(ServingError):
+    """Base of the artifact-cache fault taxonomy (``serving/cache.py``).
+
+    Cache faults are *never* request failures: the cache tier is an
+    optimization in front of compute, so every cache fault degrades
+    fail-open — a corrupt entry is quarantined and recomputed, an
+    unavailable tier is bypassed straight to the device path. These
+    classes exist so the degradation is **typed** (counted, breaker-
+    visible, testable) instead of a silent ``except Exception``."""
+
+
+class CacheCorruptionError(CacheFault):
+    """An artifact's stored checksum no longer matches its bytes — bit
+    rot, a torn write, or an injected ``corrupt_entry`` fault. The entry
+    is quarantined (evicted + counted) and the request transparently
+    recomputed; corrupt bytes must NEVER reach a completion."""
+
+    def __init__(self, key: str, expected: str, actual: str):
+        super().__init__(
+            f"cache artifact {key[:16]}… failed integrity re-verification: "
+            f"stored checksum {expected[:12]}… != recomputed {actual[:12]}…"
+        )
+        self.key = key
+        self.expected = expected
+        self.actual = actual
+
+
+class CacheUnavailableError(CacheFault):
+    """The cache tier did not answer (injected ``cache_unavailable``
+    fault, or a real backend outage). The caller serves via compute —
+    a retry of the *request* is pointless (compute already works), but
+    the cache breaker uses consecutive unavailability to stop consulting
+    the tier entirely until it recovers."""
+
+    def __init__(self, reason: str = "cache tier unavailable"):
+        super().__init__(reason)
+
+
 #: fail_type stamps of the execution-fault taxonomy (TelemetryRecord).
 TRANSIENT_FAULT = "transient_fault"
 PERMANENT_FAULT = "permanent_fault"
@@ -86,8 +127,21 @@ def classify(exc: BaseException) -> str:
     PermanentExecutorError, garbage-volume ValueErrors, geometry
     failures, unknown bugs — is ``permanent_fault``: retrying an
     unclassified fault spends capacity exactly when the service is
-    least healthy, so unknown means permanent by default."""
+    least healthy, so unknown means permanent by default.
+
+    ``BaseException``s that are not ``Exception``s — KeyboardInterrupt,
+    SystemExit, GeneratorExit — are control flow, not faults: swallowing
+    one as a ``permanent_fault`` record would turn Ctrl-C into a served
+    "failure" and keep the process alive against the operator's explicit
+    instruction. They re-raise."""
+    if not isinstance(exc, Exception):
+        raise exc
     if isinstance(exc, TransientExecutorError):
+        return TRANSIENT_FAULT
+    if isinstance(exc, CacheFault):
+        # a cache fault that leaked to classify means fail-open is in
+        # progress: recompute fixes corruption and the compute path does
+        # not need the cache at all, so a retry genuinely helps
         return TRANSIENT_FAULT
     return PERMANENT_FAULT
 

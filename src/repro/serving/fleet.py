@@ -72,8 +72,10 @@ from repro.serving.simulator import (
     _pctls_ms,
     _round,
     _sample_mix,
+    _ShapeStub,
     reference_engine,
     resilience_block,
+    zipf_content_id,
 )
 from repro.telemetry.analysis import nearest_rank
 
@@ -167,6 +169,15 @@ class FleetConfig:
     # and the committed fleet golden traces — bit-for-bit unchanged.
     resilience: Optional[object] = None
     fault_plan: Optional[object] = None
+    # content-addressed artifact cache (serving/cache.py): a CacheConfig
+    # here builds ONE ArtifactCache shared by every replica scheduler —
+    # the fleet's shared cache tier in front of routing. None (default)
+    # keeps every pre-cache scenario — and its golden trace — untouched.
+    cache: Optional[object] = None
+    # Zipf content-popularity skew over arriving volumes (see
+    # simulator.zipf_content_id); None disables content identity.
+    content_skew: Optional[float] = None
+    content_universe: int = 64
 
 
 @dataclasses.dataclass
@@ -211,6 +222,7 @@ class Replica:
             resilience=fleet.cfg.resilience,
             fault_plan=fleet.cfg.fault_plan,
             replica_id=rid,
+            cache=fleet.cache,  # the SHARED tier — one instance fleetwide
         )
         self.busy_until = fleet.clock.now()
         self.inflight = False
@@ -265,6 +277,23 @@ class Fleet:
         self.cfg = cfg
         self.engine_factory = engine_factory or reference_engine
         self.clock = VirtualClock()
+        # the shared artifact-cache tier (serving/cache.py): ONE instance
+        # in front of every replica — content-identical requests hit the
+        # same entries whichever replica serves them, and the router can
+        # steer a request to its in-flight single-flight leader.
+        self.cache = None
+        self.content_routes = 0  # routes steered to an in-flight leader
+        if cfg.cache is not None:
+            from repro.serving.cache import ArtifactCache, CacheConfig
+
+            self.cache = (
+                cfg.cache
+                if isinstance(cfg.cache, ArtifactCache)
+                else ArtifactCache(
+                    cfg.cache if isinstance(cfg.cache, CacheConfig) else None,
+                    fault_plan=cfg.fault_plan,
+                )
+            )
         self.replicas: list[Replica] = []  # every replica ever created
         self.ledger: list[FleetRequest] = []
         self._fid: dict[tuple[int, int], int] = {}  # (replica, local id) -> fid
@@ -414,6 +443,21 @@ class Fleet:
                 crashed=sum(1 for r in self.replicas if r.crashed),
             )
         self.routes += 1
+        if self.cache is not None:
+            # content-to-leader steering, in front of EVERY policy: a
+            # request whose artifact is already being computed in flight
+            # routes to the leader's replica, where the scheduler
+            # attaches it as a single-flight follower instead of running
+            # a duplicate forward. A miss (or an unroutable owner) falls
+            # through to the configured policy untouched.
+            ckey = self._content_key(vol, mode, executor, devices, precision, cands[0])
+            if ckey is not None:
+                owner = self.cache.inflight_owner(ckey)
+                if owner is not None:
+                    rep = self._by_id(owner)
+                    if rep is not None and rep in cands:
+                        self.content_routes += 1
+                        return rep
         policy = self.cfg.policy
         if policy == "round_robin":
             chosen = cands[self._rr % len(cands)]
@@ -434,6 +478,31 @@ class Fleet:
                 chosen = min(cands, key=self._load_jsq)
         assert not chosen.draining and chosen.live
         return chosen
+
+    def _content_key(
+        self, vol, mode, executor, devices, precision, ref: Replica
+    ) -> Optional[str]:
+        """The artifact key a request WOULD cache under, resolved through
+        ``ref``'s signature cache (every replica serves the same model,
+        so any replica's resolution is authoritative). None when the
+        volume has no content identity — uncacheable, route by policy."""
+        from repro.serving import cache as cache_mod
+
+        content = cache_mod.content_hash(vol)
+        if content is None:
+            return None
+        key, _ = ref.sched.peek_signature(
+            vol, mode=mode, executor=executor, devices=devices, precision=precision
+        )
+        if key is None:
+            return None
+        if ref.sched._model_fp is None:
+            ref.sched._model_fp = cache_mod.model_fingerprint(
+                ref.sched.engine.cfg.model
+            )
+        return cache_mod.artifact_key(
+            content, ref.sched._model_fp, key.precision, key.mode
+        )
 
     def submit(
         self,
@@ -493,7 +562,7 @@ class Fleet:
             fid = self._fid.pop((source.id, req.id))
             entry = self.ledger[fid]
             was_hedge = entry.copies.pop((source.id, req.id), False)
-            if entry.outcome in ("completed", "demoted") or entry.copies:
+            if entry.outcome in ("completed", "demoted", "coalesced") or entry.copies:
                 self.hedge_cancelled += 1
                 continue
             target = self._pick(
@@ -534,8 +603,8 @@ class Fleet:
                 continue
             entry = self.ledger[fid]
             was_hedge = entry.copies.pop((rep.id, c.id), False)
-            served = c.outcome in ("completed", "demoted")
-            already_served = entry.outcome in ("completed", "demoted")
+            served = c.outcome in ("completed", "demoted", "coalesced")
+            already_served = entry.outcome in ("completed", "demoted", "coalesced")
             if already_served and not served:
                 continue  # losing copy shed after its twin won
             entry.outcome = c.outcome
@@ -692,7 +761,7 @@ class Fleet:
             met = sum(
                 1
                 for e in window
-                if e.outcome in ("completed", "demoted")
+                if e.outcome in ("completed", "demoted", "coalesced")
                 and (e.finish_s - e.arrival_s) <= a.slo_latency_s
             )
             attainment = met / len(window)
@@ -831,7 +900,11 @@ class FleetReport:
         timeline."""
         fl = self.fleet
         entries = fl.ledger
-        served = [e for e in entries if e.outcome in ("completed", "demoted")]
+        served = [
+            e
+            for e in entries
+            if e.outcome in ("completed", "demoted", "coalesced")
+        ]
         rejected: dict[str, int] = {}
         for rep in fl.replicas:
             for reason, cnt in rep.sched.stats.rejected.items():
@@ -842,7 +915,11 @@ class FleetReport:
             by_class.setdefault(e.priority, []).append(e)
         for name in sorted(by_class):
             es = by_class[name]
-            sv = [e for e in es if e.outcome in ("completed", "demoted")]
+            sv = [
+                e
+                for e in es
+                if e.outcome in ("completed", "demoted", "coalesced")
+            ]
             classes[name] = {
                 "requests": len(es),
                 "served": len(sv),
@@ -860,22 +937,26 @@ class FleetReport:
         per_replica = []
         for rep in sorted(fl.replicas, key=lambda r: r.id):
             st = rep.sched.stats
-            per_replica.append(
-                {
-                    "id": rep.id,
-                    "admitted": st.admitted,
-                    "completed": st.completed,
-                    "demoted": st.demoted,
-                    "rejected": st.rejected_total(),
-                    "evacuated": st.evacuated,
-                    "refused": st.refused,
-                    "batches": st.batches,
-                    "max_queue_depth": st.max_queue_depth,
-                    "warm_signatures": len(rep.warm),
-                    "crashed": rep.crashed,
-                    "drained": rep.retired,
-                }
-            )
+            row = {
+                "id": rep.id,
+                "admitted": st.admitted,
+                "completed": st.completed,
+                "demoted": st.demoted,
+                "rejected": st.rejected_total(),
+                "evacuated": st.evacuated,
+                "refused": st.refused,
+                "batches": st.batches,
+                "max_queue_depth": st.max_queue_depth,
+                "warm_signatures": len(rep.warm),
+                "crashed": rep.crashed,
+                "drained": rep.retired,
+            }
+            if fl.cache is not None:
+                # the fifth terminal state — only stamped on cached runs
+                # so pre-cache goldens stay byte-exact
+                row["coalesced"] = st.coalesced
+                row["cache_hits"] = st.cache_hits
+            per_replica.append(row)
         total_batches = sum(r.sched.stats.batches for r in fl.replicas)
         out = {
             "scenario": self.cfg.name,
@@ -930,6 +1011,31 @@ class FleetReport:
         # policy or a fault plan — pre-resilience goldens stay byte-exact.
         if self.cfg.resilience is not None or self.cfg.fault_plan is not None:
             out["resilience"] = self._resilience_block(served)
+        # Same discipline for the cache rollup: only cache-configured
+        # runs carry it, so pre-cache fleet goldens stay byte-exact.
+        if self.cfg.cache is not None:
+            out["cache"] = self._cache_block(served)
+        return out
+
+    def _cache_block(self, served: list) -> dict:
+        """The fleet-wide artifact-cache rollup: the shared tier's own
+        counters plus the per-replica terminal cache accounting summed —
+        admission hits, single-flight coalesced completions, requests
+        served without a forward, and router steers to in-flight
+        leaders. ``quarantined_served`` MUST stay 0 (the corrupt-bytes-
+        never-served guarantee); the regression gate pins it."""
+        fl = self.fleet
+        out = dict(fl.cache.summary())
+        out["admission_hits"] = sum(
+            r.sched.stats.cache_hits for r in fl.replicas
+        )
+        out["coalesced"] = sum(r.sched.stats.coalesced for r in fl.replicas)
+        out["served_from_cache"] = sum(
+            1
+            for e in served
+            if e.completion is not None and e.completion.record.cache_hit
+        )
+        out["content_routes"] = fl.content_routes
         return out
 
     def _resilience_block(self, served: list) -> dict:
@@ -997,6 +1103,14 @@ def simulate_fleet(
     times = proc(horizon_s=cfg.horizon_s, rng=rng, **cfg.process_kwargs)
     arrivals = [(t, _sample_mix(cfg.mix, rng)) for t in times]
     vols = [_make_volume(spec, rng, cfg.execute) for _, spec in arrivals]
+    if cfg.content_skew is not None:
+        # per-index counter-hash identities (simulator.zipf_content_id):
+        # enabling skew cannot perturb the arrival/mix draws above
+        for idx, ((_, spec), v) in enumerate(zip(arrivals, vols)):
+            if isinstance(v, _ShapeStub) and not spec.garbage:
+                v.content_id = zipf_content_id(
+                    cfg.seed, idx, cfg.content_skew, cfg.content_universe
+                )
     fleet = Fleet(cfg, engine_factory)
     fleet.run(arrivals, vols)
     assert fleet.conserved(), "fleet conservation violated"
@@ -1220,9 +1334,66 @@ def fleet_preset(
                 ),
             ),
         )
+    if name == "fleet_cached":
+        from repro.serving.cache import CacheConfig
+
+        return FleetConfig(
+            name="fleet_cached",
+            seed=seed,
+            horizon_s=horizon_s or 600.0,
+            # burst traffic IS the stampede scenario: each storm floods
+            # the fleet with Zipf-hot content faster than it can serve,
+            # queues build, and identical requests pile onto in-flight
+            # single-flight leaders instead of running duplicate forwards
+            process="burst",
+            process_kwargs={
+                "base_hz": 2.0,
+                "burst_hz": 60.0,
+                "period_s": 120.0,
+                "burst_len_s": 15.0,
+            },
+            mix=STANDARD_MIX,
+            replicas=4,
+            policy="cache_affinity",
+            scheduler=SchedulerConfig(
+                max_queue_depth=64,
+                admission_hbm_bytes=512 * 1024 * 1024,
+                max_batch_requests=8,
+                native_shapes=True,
+            ),
+            service=FleetServiceModel(base_s=0.1, batch_overhead_s=0.05),
+            # the artifact-cache acceptance scenario: Zipf(1.1) content
+            # skew over 64 distinct volumes makes the hot head cacheable
+            # and stampede-prone; 2% of consults land on a bit-flipped
+            # entry (quarantine + transparent recompute, NEVER served);
+            # the tier goes dark for [240, 300) (every consult
+            # unavailable -> breaker opens after 3, half-open probe at
+            # +30 re-opens mid-outage, the +60 probe closes it) — all of
+            # it fail-open: outage-window requests serve via compute.
+            # 2 MiB capacity against a ~250-artifact working set: LRU
+            # eviction runs hot (pinned in-flight entries are never
+            # victims — the property tests pin that), and the Zipf head
+            # survives eviction pressure because recency tracks heat
+            cache=CacheConfig(
+                capacity_bytes=2 * 1024 * 1024,
+                breaker_trip_after=3,
+                breaker_cooldown_s=30.0,
+            ),
+            content_skew=1.1,
+            content_universe=256,
+            fault_plan=FaultPlan(
+                seed=seed,
+                rules=(
+                    FaultRule(kind="corrupt_entry", rate=0.02),
+                    FaultRule(
+                        kind="cache_unavailable", rate=1.0, t0=240.0, t1=300.0
+                    ),
+                ),
+            ),
+        )
     raise KeyError(
         f"unknown fleet preset {name!r}: fleet_steady | fleet_overload | "
-        "fleet_failover | fleet_autoscale | fleet_faultstorm"
+        "fleet_failover | fleet_autoscale | fleet_faultstorm | fleet_cached"
     )
 
 
@@ -1232,4 +1403,5 @@ FLEET_PRESETS = (
     "fleet_failover",
     "fleet_autoscale",
     "fleet_faultstorm",
+    "fleet_cached",
 )

@@ -346,6 +346,22 @@ def demote_rung(key, engine):
 
 FAULT_KINDS = ("transient", "permanent", "straggler", "stuck")
 
+#: cache-tier fault kinds (serving/cache.py). These never fire on the
+#: execution path — ``decide`` skips them and ``decide_cache`` sees only
+#: them — so adding cache rules to a plan cannot perturb an existing
+#: execution-fault storm's coins (byte-stable goldens).
+#:
+#:   * ``corrupt_entry``      — flip a byte of the stored artifact just
+#:     before integrity verification: the checksum mismatch MUST be
+#:     caught, quarantined, and transparently recomputed.
+#:   * ``cache_unavailable``  — the tier does not answer: the consult
+#:     degrades fail-open to the compute path and feeds the cache
+#:     breaker.
+#:   * ``slow_cache``         — the consult answers after
+#:     ``slow_factor``x the modeled verify cost (a slow tier must
+#:     degrade latency, never correctness).
+CACHE_FAULT_KINDS = ("corrupt_entry", "cache_unavailable", "slow_cache")
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultRule:
@@ -368,9 +384,10 @@ class FaultRule:
     slow_factor: float = 4.0
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
+        if self.kind not in FAULT_KINDS + CACHE_FAULT_KINDS:
             raise ResilienceConfigError(
-                f"unknown fault kind {self.kind!r}: {FAULT_KINDS}"
+                f"unknown fault kind {self.kind!r}: "
+                f"{FAULT_KINDS + CACHE_FAULT_KINDS}"
             )
         if not 0.0 <= self.rate <= 1.0:
             raise ResilienceConfigError(
@@ -388,6 +405,15 @@ class FaultRule:
             return False
         if self.priority is not None and priority != self.priority:
             return False
+        if key is None:
+            # a consult with no dispatch signature (e.g. a fleet-level
+            # cache peek): signature filters cannot match it
+            return not (
+                self.executor_substr is not None
+                or self.mode is not None
+                or self.shape is not None
+                or self.precision is not None
+            )
         if (
             self.executor_substr is not None
             and self.executor_substr not in key.executor
@@ -437,6 +463,8 @@ class FaultPlan:
         priority: Optional[str] = None,
     ) -> Optional[FaultDecision]:
         for i, rule in enumerate(self.rules):
+            if rule.kind in CACHE_FAULT_KINDS:
+                continue  # cache rules never fire on the execution path
             if not rule.matches(t=t, replica=replica, key=key, priority=priority):
                 continue
             u = unit_hash("fault", self.seed, i, replica, request_id, attempt)
@@ -450,8 +478,43 @@ class FaultPlan:
                 )
         return None
 
+    def decide_cache(
+        self,
+        *,
+        t: float,
+        replica: int,
+        key,
+        request_id: int,
+        op: str,
+    ) -> Optional[FaultDecision]:
+        """The cache-tier twin of ``decide``: a PURE function of (plan,
+        consult time, replica, signature, request id, op) over the
+        CACHE_FAULT_KINDS rules only. ``op`` distinguishes lookups from
+        stores in the coin (a request's lookup and its completion's
+        store roll independently), with a distinct hash salt so cache
+        storms can never collide with execution-fault coins. ``key``
+        may be None for consults with no dispatch signature."""
+        for i, rule in enumerate(self.rules):
+            if rule.kind not in CACHE_FAULT_KINDS:
+                continue  # execution rules never fire on the cache path
+            if not rule.matches(t=t, replica=replica, key=key, priority=None):
+                continue
+            u = unit_hash("cachefault", self.seed, i, replica, request_id, op)
+            if u < rule.rate:
+                return FaultDecision(
+                    kind=rule.kind,
+                    rule_index=i,
+                    slow_factor=rule.slow_factor
+                    if rule.kind == "slow_cache"
+                    else 1.0,
+                )
+        return None
+
     def has_stuck(self) -> bool:
         return any(r.kind == "stuck" for r in self.rules)
+
+    def has_cache_rules(self) -> bool:
+        return any(r.kind in CACHE_FAULT_KINDS for r in self.rules)
 
 
 # ----------------------------------------------------------- policy bundle ---

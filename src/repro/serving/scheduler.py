@@ -131,6 +131,12 @@ class ServeRequest:
     not_before_s: float = 0.0
     probe: bool = False
     faults: int = 0
+    # content-addressed cache state (serving/cache.py): the artifact key
+    # this request LEADS for — set when the admission consult missed and
+    # this request registered the single-flight in-flight entry; its
+    # terminal record is stored under this key and its followers complete
+    # with it. None for non-leaders (hits, followers, uncacheable).
+    cache_key: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -162,7 +168,8 @@ class SchedulerConfig:
 class SchedulerStats:
     """Conservation ledger. Terminal states are disjoint:
 
-        admitted == completed + demoted + rejected        (after drain)
+        admitted == completed + demoted + rejected + evacuated + coalesced
+        (after drain)
 
     ``completed`` counts requests that reached service in their admitted
     mode (whatever their pipeline status — a typed *execution* failure is
@@ -198,13 +205,27 @@ class SchedulerStats:
     timeouts: int = 0
     faulted_requests: int = 0
     recovered_requests: int = 0
+    # artifact-cache counters (serving/cache.py). ``coalesced`` is a
+    # FIFTH terminal state in the conservation sum: a request admitted
+    # here that completed by attaching to an identical in-flight
+    # leader's artifact (single-flight stampede collapsing) — it never
+    # entered the queue and never touched a device. ``cache_hits``
+    # counts admission-time completions served straight from a verified
+    # (or negative-cached) artifact; those are ordinary ``completed``
+    # requests, stamped ``cache_hit`` in telemetry.
+    coalesced: int = 0
+    cache_hits: int = 0
 
     def rejected_total(self) -> int:
         return sum(self.rejected.values())
 
     def conserved(self) -> bool:
         return self.admitted == (
-            self.completed + self.demoted + self.rejected_total() + self.evacuated
+            self.completed
+            + self.demoted
+            + self.rejected_total()
+            + self.evacuated
+            + self.coalesced
         )
 
 
@@ -258,12 +279,23 @@ class RequestScheduler:
         resilience=None,
         fault_plan=None,
         replica_id: int = 0,
+        cache=None,
     ):
         self.engine = engine
         self.cfg = cfg or SchedulerConfig()
         self.clock = clock or _MonotonicClock()
         self.service_model = service_model
         self.execute = execute
+        # content-addressed artifact cache (serving/cache.py), consulted
+        # at admission: a verified hit completes in O(hash) without
+        # touching a device; a miss may register this request as the
+        # single-flight leader; identical concurrent requests attach to
+        # the leader as followers (``_followers``) and complete with its
+        # artifact. Shared across replicas by the fleet layer — the
+        # instance IS the shared tier.
+        self.cache = cache
+        self._followers: dict[str, list[ServeRequest]] = {}
+        self._model_fp: Optional[str] = None
         # resilience policy (serving/resilience.py): retry budgets,
         # per-class service timeouts, and the breaker-driven degradation
         # ladder. ``fault_plan`` is the seeded injector the deterministic
@@ -343,8 +375,10 @@ class RequestScheduler:
         )
         req.key, req.bytes_priced = self._resolve(req)
         req.base_key, req.base_bytes = req.key, req.bytes_priced
-        self.queue.append(req)
         self.stats.admitted += 1
+        if self._consult_cache(req, now, force=force):
+            return rid  # terminal at admission: hit, negative, or follower
+        self.queue.append(req)
         self.stats.max_queue_depth = max(self.stats.max_queue_depth, len(self.queue))
         return rid
 
@@ -428,6 +462,179 @@ class RequestScheduler:
             return unl.charge_streaming(shape, cfg.model, dtype_bytes=ab)
         return unl.charge_inference(shape, cfg.model, dtype_bytes=ab)
 
+    # ------------------------------------------------------- artifact cache
+
+    def _consult_cache(self, req: ServeRequest, now: float, force: bool) -> bool:
+        """Admission-time cache consult. Returns True when the request is
+        TERMINAL already — served from a verified artifact (``completed``
+        + ``cache_hits``), from a negative-cached verdict, or attached as
+        a single-flight follower (completes with its leader) — and must
+        not enter the queue. Returns False on miss/bypass/unavailable:
+        the request serves via compute, fail-open, possibly as the new
+        in-flight leader. ``force`` marks failover/hedge copies: they may
+        take a clean hit (terminal is safe anywhere) but never lead or
+        follow — single-flight coupling across exactly-once copies would
+        tangle the fleet ledger's cancellation paths."""
+        if self.cache is None or req.key is None:
+            return False
+        from repro.serving import cache as cache_mod
+        from repro.serving.errors import CacheCorruptionError
+
+        content = cache_mod.content_hash(req.vol)
+        if content is None:
+            return False  # no content identity: uncacheable
+        if self._model_fp is None:
+            self._model_fp = cache_mod.model_fingerprint(self.engine.cfg.model)
+        ckey = cache_mod.artifact_key(
+            content, self._model_fp, req.key.precision, req.key.mode
+        )
+        look = self.cache.lookup(
+            ckey,
+            now=now,
+            replica=self.replica_id,
+            request_id=req.id,
+            group_key=req.key,
+        )
+        if look.status in ("unavailable", "bypass"):
+            return False  # fail open: compute path, no single-flight
+        if look.status == "hit":
+            try:
+                payload = self.cache.serve_payload(look.entry)
+            except CacheCorruptionError:
+                # double-guard breach path: recompute instead of serving
+                look = cache_mod.Lookup(
+                    status="miss", slow_factor=look.slow_factor
+                )
+            else:
+                self._complete_from_cache(
+                    req, payload, look, now, result=look.entry.result
+                )
+                return True
+        if look.status == "negative":
+            self._complete_from_cache(
+                req, None, look, now, fail_type=look.entry.fail_type
+            )
+            return True
+        if look.status == "inflight":
+            if not force and look.owner == self.replica_id:
+                req.cache_key = ckey
+                self._followers.setdefault(ckey, []).append(req)
+                return True
+            return False  # a peer's leader: compute independently
+        if look.status == "miss" and not force:
+            self.cache.begin(
+                ckey,
+                replica=self.replica_id,
+                now=now,
+                est_bytes=cache_mod.artifact_bytes_modeled(req.key.shape),
+            )
+            req.cache_key = ckey
+        if look.slow_factor > 1.0:
+            # a slow consult delays THIS request's batch eligibility by
+            # the inflated verify cost — latency degradation, fail-open
+            req.not_before_s = max(
+                req.not_before_s,
+                now + self.cache.cfg.verify_s * look.slow_factor,
+            )
+        return False
+
+    def _complete_from_cache(
+        self,
+        req: ServeRequest,
+        payload: Optional[dict],
+        look,
+        now: float,
+        *,
+        fail_type: Optional[str] = None,
+        result=None,
+    ) -> None:
+        """Terminal completion at admission, O(hash): the verified
+        artifact's metadata (or the negative-cached fault verdict)
+        becomes this request's record, stamped ``cache_hit`` — no queue,
+        no batch, no device. ``wait + service == finish - arrival``
+        holds with wait == 0 and service == the (possibly slowed)
+        verify cost."""
+        service = self.cache.cfg.verify_s * look.slow_factor
+        finish = now + service
+        negative = payload is None
+        rec = TelemetryRecord(
+            model=self.engine.cfg.name,
+            mode=(payload or {}).get("mode") or req.key.mode,
+            status="fail" if negative else "ok",
+            times=StageTimes(),
+            executor=(payload or {}).get("executor") or req.key.executor,
+            precision=(payload or {}).get("precision") or req.key.precision,
+            params_bytes=(payload or {}).get("params_bytes"),
+            fail_type=fail_type,
+            request_id=req.id,
+            arrival_s=req.arrival_s,
+            queue_wait_s=0.0,
+            service_s=service,
+            batch_size=1,
+            priority_class=req.priority_class.name,
+            cache_hit=True,
+            extra=(
+                {"negative_cache": True}
+                if negative
+                else {"artifact_checksum": look.entry.checksum[:16]}
+            ),
+        )
+        self.engine.log.append(rec)
+        self.stats.completed += 1
+        self.stats.cache_hits += 1
+        self.completions.append(
+            Completion(
+                id=req.id,
+                outcome="completed",
+                record=rec,
+                result=result,
+                arrival_s=req.arrival_s,
+                finish_s=finish,
+            )
+        )
+
+    def _complete_cache_leader(self, req: ServeRequest, rec, result, finish: float) -> None:
+        """Fold a single-flight leader's terminal record into the cache
+        and complete every attached follower with the SAME artifact —
+        outcome ``coalesced``, stamped ``cache_hit``, byte-identical
+        payload (one shared record template, one shared result object,
+        one artifact checksum). N identical concurrent requests ==
+        1 device execution + N-1 coalesced completions."""
+        ckey = req.cache_key
+        checksum = self.cache.complete(
+            ckey,
+            now=finish,
+            record=rec,
+            result=result,
+            shape=req.key.shape if req.key is not None else (0, 0, 0),
+            replica=self.replica_id,
+            request_id=req.id,
+        )
+        if checksum is not None:
+            rec.extra = {**rec.extra, "artifact_checksum": checksum[:16]}
+        for f in self._followers.pop(ckey, []):
+            frec = dataclasses.replace(
+                rec,
+                request_id=f.id,
+                arrival_s=f.arrival_s,
+                queue_wait_s=max(0.0, finish - f.arrival_s),
+                service_s=0.0,
+                cache_hit=True,
+                attempt=0,
+            )
+            self.engine.log.append(frec)
+            self.stats.coalesced += 1
+            self.completions.append(
+                Completion(
+                    id=f.id,
+                    outcome="coalesced",
+                    record=frec,
+                    result=result,
+                    arrival_s=f.arrival_s,
+                    finish_s=finish,
+                )
+            )
+
     # ------------------------------------------------------------ dispatch
 
     def _seed_index(self, ready: list[int]) -> int:
@@ -461,6 +668,28 @@ class RequestScheduler:
                 finish_s=now,
             )
         )
+        # a shed single-flight leader must not strand its followers: the
+        # pin is released and the followers re-enter the queue to serve
+        # independently (they may themselves be shed on the next pass)
+        self._release_lead(req)
+
+    def _release_lead(self, req: ServeRequest) -> None:
+        """Release a leader's single-flight pin without completing it:
+        the pending placeholder is abandoned (bytes credited back) and
+        every attached follower re-enters the queue as an independent
+        compute-path request. Safe to call on non-leaders (no-op)."""
+        if req.cache_key is None or self.cache is None:
+            return
+        ckey, req.cache_key = req.cache_key, None
+        if self.cache.inflight_owner(ckey) == self.replica_id:
+            self.cache.abandon(ckey)
+        for f in self._followers.pop(ckey, []):
+            f.cache_key = None
+            self.queue.append(f)
+        if self.queue:
+            self.stats.max_queue_depth = max(
+                self.stats.max_queue_depth, len(self.queue)
+            )
 
     def _log_shed(self, rid, cls, arrival, reason, now=None):
         """Typed telemetry for a request shed before service."""
@@ -755,6 +984,10 @@ class RequestScheduler:
                 finish_s=finish,
             )
         )
+        if req.cache_key is not None and self.cache is not None:
+            # single-flight leader reached a terminal state: store (or
+            # negative-cache) the artifact and coalesce its followers
+            self._complete_cache_leader(req, rec, result, finish)
 
     def _fault_decision(self, req: ServeRequest, t: float):
         """The seeded injector's verdict for this attempt — pure in
@@ -823,9 +1056,31 @@ class RequestScheduler:
         drain re-dispatch): the queue empties, each popped request counts
         as ``evacuated`` in the conservation ledger — admitted here,
         served elsewhere. Returns the requests in (arrival, id) order so
-        re-dispatch preserves FIFO fairness at the target replica."""
-        out = sorted(self.queue, key=lambda r: (r.arrival_s, r.id))
+        re-dispatch preserves FIFO fairness at the target replica.
+
+        Single-flight state is torn down with the queue: every follower
+        is popped into the evacuation set (it re-dispatches as an
+        independent request), and every in-flight cache pin this replica
+        owns is abandoned — including pins of unserved batch-tail
+        leaders the fleet evacuates separately — so a crashed replica
+        can never leave a pinned placeholder that blocks eviction
+        forever."""
+        out = list(self.queue)
         self.queue.clear()
+        if self.cache is not None:
+            for lst in self._followers.values():
+                for f in lst:
+                    f.cache_key = None
+                    out.append(f)
+            self._followers.clear()
+            for req in out:
+                if req.cache_key is not None:
+                    self.cache.abandon(req.cache_key)
+                    req.cache_key = None
+            for ckey, owner in list(self.cache.inflight.items()):
+                if owner == self.replica_id:
+                    self.cache.abandon(ckey)
+        out.sort(key=lambda r: (r.arrival_s, r.id))
         self.stats.evacuated += len(out)
         return out
 
@@ -836,12 +1091,25 @@ class RequestScheduler:
         in the conservation ledger (admitted here, resolved elsewhere —
         the same terminal state crash evacuation uses). Returns the
         request, or None when it is not queued (already served, shed,
-        or never here) — in which case nothing changes."""
+        or never here) — in which case nothing changes. A cancelled
+        single-flight leader releases its pin and re-queues its
+        followers; a cancelled follower is plucked from its leader's
+        list without disturbing the leader."""
         for req in self.queue:
             if req.id == rid:
                 self.queue.remove(req)
                 self.stats.evacuated += 1
+                self._release_lead(req)
                 return req
+        for ckey in list(self._followers):
+            for f in self._followers[ckey]:
+                if f.id == rid:
+                    self._followers[ckey].remove(f)
+                    if not self._followers[ckey]:
+                        del self._followers[ckey]
+                    f.cache_key = None
+                    self.stats.evacuated += 1
+                    return f
         return None
 
     def next_ready_s(self, now: float) -> Optional[float]:

@@ -32,6 +32,7 @@ never as flakes. ``benchmarks/bench_serving.py`` is the CLI.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
 import math
@@ -149,6 +150,40 @@ ARRIVAL_PROCESSES = {
 }
 
 
+# -------------------------------------------------------- content skew ---
+
+#: memoized Zipf CDFs keyed on (s, n) — the CDF is a pure function of
+#: the distribution parameters, so sharing it across runs cannot couple
+#: their draws (each draw's coin is an independent unit_hash).
+_ZIPF_CDF_CACHE: dict = {}
+
+
+def zipf_content_id(seed: int, index: int, s: float, n: int) -> int:
+    """The ``index``-th arrival's content identity under a Zipf(s)
+    popularity law over ``n`` distinct volumes — id 0 is the hottest.
+
+    Deterministic by construction: the uniform coin is
+    ``unit_hash("zipf", seed, index)`` (the counter-hash discipline of
+    serving/resilience.py), NOT a shared RNG stream — so adding or
+    removing OTHER randomness in a scenario cannot perturb which content
+    arrives when, and two runs with one seed draw byte-identical content
+    traces. Inverse-CDF over the memoized normalized Zipf weights."""
+    from repro.serving.resilience import unit_hash
+
+    key = (float(s), int(n))
+    cdf = _ZIPF_CDF_CACHE.get(key)
+    if cdf is None:
+        weights = [1.0 / (k ** float(s)) for k in range(1, int(n) + 1)]
+        total = sum(weights)
+        acc, cdf = 0.0, []
+        for w in weights:
+            acc += w / total
+            cdf.append(acc)
+        _ZIPF_CDF_CACHE[key] = cdf
+    u = unit_hash("zipf", seed, index)
+    return min(bisect.bisect_left(cdf, u), int(n) - 1)
+
+
 # ------------------------------------------------------------ scenarios ---
 
 
@@ -187,6 +222,17 @@ class SimConfig:
     # traces — bit-for-bit unchanged.
     resilience: Optional[object] = None
     fault_plan: Optional[object] = None
+    # content-addressed artifact cache (serving/cache.py): a CacheConfig
+    # here puts the cache tier in front of admission; None (default)
+    # keeps every pre-cache scenario — and its golden trace — untouched.
+    cache: Optional[object] = None
+    # Zipf popularity skew over request *content*: ``content_skew`` is
+    # the Zipf exponent s (None disables content identity entirely) and
+    # ``content_universe`` the number of distinct volumes. Only modeled
+    # (stub) volumes get identities — the skew machinery is a cache
+    # workload generator, not an MRI synthesizer.
+    content_skew: Optional[float] = None
+    content_universe: int = 64
 
 
 @dataclasses.dataclass
@@ -209,7 +255,11 @@ class SimReport:
         classes = {}
         for name in sorted(by_class):
             cs = by_class[name]
-            served = [c for c in cs if c.outcome in ("completed", "demoted")]
+            served = [
+                c
+                for c in cs
+                if c.outcome in ("completed", "demoted", "coalesced")
+            ]
             e2e = [c.finish_s - c.arrival_s for c in served]
             wait = [c.record.queue_wait_s or 0.0 for c in served]
             classes[name] = {
@@ -225,7 +275,9 @@ class SimReport:
                 "queue_wait_ms": _pctls_ms(wait),
             }
         served_all = [
-            c for c in self.completions if c.outcome in ("completed", "demoted")
+            c
+            for c in self.completions
+            if c.outcome in ("completed", "demoted", "coalesced")
         ]
         out = {
             "scenario": self.cfg.name,
@@ -252,6 +304,10 @@ class SimReport:
             # only stamped when the resilience layer is configured, so
             # the PR 5 golden summaries stay byte-identical
             out["resilience"] = resilience_block(self.scheduler, served_all)
+        if self.cfg.cache is not None:
+            # same discipline: the cache rollup exists only for cache
+            # scenarios, so pre-cache goldens stay byte-identical
+            out["cache"] = cache_block(self.scheduler, served_all)
         return out
 
     def to_json(self) -> str:
@@ -310,6 +366,21 @@ def resilience_block(sched, served) -> dict:
     }
 
 
+def cache_block(sched, served) -> dict:
+    """The deterministic artifact-cache rollup of ONE scheduler: the
+    cache tier's own counters (hits, quarantines, breaker trips, bytes)
+    plus the scheduler's terminal cache accounting — admission-time
+    hits, single-flight coalesced completions, and how many served
+    requests never touched a device. Shared by the single-server
+    summary and the fleet aggregation (serving/fleet.py)."""
+    st = sched.stats
+    out = dict(sched.cache.summary()) if sched.cache is not None else {}
+    out["admission_hits"] = st.cache_hits
+    out["coalesced"] = st.coalesced
+    out["served_from_cache"] = sum(1 for c in served if c.record.cache_hit)
+    return out
+
+
 def _sample_mix(mix, rng: np.random.Generator) -> ScenarioSpec:
     weights = np.array([s.weight for s in mix], dtype=np.float64)
     idx = int(rng.choice(len(mix), p=weights / weights.sum()))
@@ -319,12 +390,20 @@ def _sample_mix(mix, rng: np.random.Generator) -> ScenarioSpec:
 class _ShapeStub:
     """What an ``execute=False`` request carries instead of voxels: the
     modeled path only ever reads ``.shape``, so a 21k-arrival soak must
-    not allocate gigabytes of random volumes nobody reads."""
+    not allocate gigabytes of random volumes nobody reads.
 
-    __slots__ = ("shape",)
+    ``content_id`` is the stub's content identity for the artifact cache
+    (serving/cache.py): two stubs with equal (shape, content_id) hash to
+    the same content — the modeled stand-in for byte-equal volumes.
+    ``None`` (the default, and every pre-cache scenario) means "no
+    content identity": the cache consult bypasses, so legacy traces are
+    untouched."""
 
-    def __init__(self, shape):
+    __slots__ = ("shape", "content_id")
+
+    def __init__(self, shape, content_id=None):
         self.shape = tuple(shape)
+        self.content_id = content_id
 
 
 def _make_volume(spec: ScenarioSpec, rng: np.random.Generator, execute: bool):
@@ -353,7 +432,28 @@ def simulate(engine, cfg: SimConfig) -> SimReport:
     # never perturb arrival sampling (keeps traces comparable across mixes
     # and between execute modes — stubs simply skip the unread draws)
     vols = [_make_volume(spec, rng, cfg.execute) for _, spec in arrivals]
+    if cfg.content_skew is not None:
+        # content identities are per-index counter-hash draws (NOT the
+        # shared rng), so enabling skew cannot perturb the arrival or
+        # mix sequences above; garbage volumes stay identity-less
+        for idx, ((_, spec), v) in enumerate(zip(arrivals, vols)):
+            if isinstance(v, _ShapeStub) and not spec.garbage:
+                v.content_id = zipf_content_id(
+                    cfg.seed, idx, cfg.content_skew, cfg.content_universe
+                )
 
+    cache = None
+    if cfg.cache is not None:
+        from repro.serving.cache import ArtifactCache, CacheConfig
+
+        cache = (
+            cfg.cache
+            if isinstance(cfg.cache, ArtifactCache)
+            else ArtifactCache(
+                cfg.cache if isinstance(cfg.cache, CacheConfig) else None,
+                fault_plan=cfg.fault_plan,
+            )
+        )
     clock = VirtualClock()
     sched = RequestScheduler(
         engine,
@@ -363,6 +463,7 @@ def simulate(engine, cfg: SimConfig) -> SimReport:
         execute=cfg.execute,
         resilience=cfg.resilience,
         fault_plan=cfg.fault_plan,
+        cache=cache,
     )
     i = 0
     refused = 0

@@ -354,6 +354,65 @@ def resilience_summary(records) -> ResilienceSummary:
     )
 
 
+@dataclasses.dataclass
+class CacheSummary:
+    """Aggregate of the artifact-cache tier as seen from telemetry alone
+    (TelemetryRecord.cache_hit, serving/cache.py): every cache-served
+    answer carries the ``cache_hit`` stamp, admission hits pay the verify
+    service, and coalesced followers ride their leader's record with
+    zero service — so the split is recoverable without the cache object.
+    Pass the cache's own ``summary()`` dict as ``store_stats`` to merge
+    the store-side ledger (stores / quarantines / evictions / breaker)."""
+
+    requests: int  # scheduler-stamped records seen
+    cache_served: int  # records answered from the cache tier
+    admission_hits: int  # clean artifact (or negative) hits at admission
+    coalesced: int  # followers collapsed onto an in-flight leader
+    negative_serves: int  # known-permanent failures answered from cache
+    computed: int  # everything else — requests that touched the device
+    cache_served_rate: float  # cache_served / requests
+    store_stats: dict  # the cache's own counter ledger ({} if not given)
+
+    def row(self) -> str:
+        return (
+            f"{self.requests},{self.cache_served},{self.admission_hits},"
+            f"{self.coalesced},{self.negative_serves},{self.computed},"
+            f"{self.cache_served_rate:.3f}"
+        )
+
+
+def cache_summary(records, store_stats: dict | None = None) -> CacheSummary:
+    """Cache-tier rollup over a telemetry log — the analysis face of
+    serving/cache.py. Records without a ``request_id`` stamp (direct
+    pipeline runs) are skipped, as are pre-service sheds (``SHED_TYPES``
+    — a refused request never consulted the cache's serving path).
+    Coalesced followers are the cache-hit records with exactly zero
+    service: the leader's artifact was handed over at completion time,
+    no verify read was paid. ``store_stats`` (an
+    ``ArtifactCache.summary()`` dict) is attached verbatim when given —
+    counters like quarantines and evictions live only in the store."""
+    rs = [
+        r
+        for r in records
+        if r.request_id is not None and r.fail_type not in SHED_TYPES
+    ]
+    served = [r for r in rs if r.cache_hit]
+    coalesced = sum(1 for r in served if r.service_s == 0.0)
+    negative = sum(
+        1 for r in served if r.extra is not None and r.extra.get("negative_cache")
+    )
+    return CacheSummary(
+        requests=len(rs),
+        cache_served=len(served),
+        admission_hits=len(served) - coalesced,
+        coalesced=coalesced,
+        negative_serves=negative,
+        computed=len(rs) - len(served),
+        cache_served_rate=len(served) / max(len(rs), 1),
+        store_stats=dict(store_stats) if store_stats else {},
+    )
+
+
 def precision_summary(records) -> list[PrecisionSummary]:
     """Per-(executor, precision) traffic/footprint aggregates over a
     telemetry log — the fleet view of the precision policy: which backend

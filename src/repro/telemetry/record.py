@@ -82,6 +82,11 @@ class TelemetryRecord:
     # True when HBM-budget admission shed the request to the sub-volume
     # failsafe (the paper's patching intervention, applied as backpressure)
     demoted: bool = False
+    # True when the content-addressed artifact cache (serving/cache.py)
+    # served this request in O(hash) without touching a device — the
+    # record's service_s is the cache lookup+verify cost, not a forward.
+    # Coalesced followers of a single-flight leader are also stamped True.
+    cache_hit: bool = False
     # which fleet replica served (or shed) the request — stamped by the
     # fleet layer (serving/fleet.py); None outside fleet serving. A
     # request re-dispatched after a replica crash carries the replica

@@ -1,0 +1,482 @@
+"""Unit tests for the content-addressed artifact cache (serving/cache.py)
+and its fault taxonomy (serving/errors.py): key derivation purity,
+integrity quarantine (corrupt bytes NEVER served), negative-verdict TTL,
+pinned-aware LRU eviction, the cache breaker's fail-open ladder, the
+scheduler's single-flight coalescing, and the degenerate-volume guard the
+conform stage grew alongside the cache (a cached artifact of a garbage
+volume would be a poisoned well — the guard keeps it out of the store).
+
+Everything runs on the virtual clock with modeled execution, so the whole
+file is sub-second on CPU.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import conform as conform_mod
+from repro.serving import cache as cache_mod
+from repro.serving.cache import (
+    ArtifactCache,
+    CacheConfig,
+    ConformMemo,
+    artifact_bytes_modeled,
+    artifact_key,
+    content_hash,
+    model_fingerprint,
+)
+from repro.serving.errors import (
+    PERMANENT_FAULT,
+    TRANSIENT_FAULT,
+    CacheCorruptionError,
+    CacheFault,
+    CacheUnavailableError,
+    PermanentExecutorError,
+    TransientExecutorError,
+    classify,
+)
+from repro.serving.resilience import FaultPlan, FaultRule
+from repro.telemetry.analysis import cache_summary
+from repro.telemetry.record import StageTimes, TelemetryRecord
+
+from test_scheduler import make_sched, vol
+
+
+def ok_record(request_id=0, **kw):
+    defaults = dict(
+        model="m",
+        mode="full",
+        status="ok",
+        times=StageTimes(),
+        executor="xla",
+        precision="fp32",
+        params_bytes=1000,
+        request_id=request_id,
+    )
+    defaults.update(kw)
+    return TelemetryRecord(**defaults)
+
+
+def store_one(cache, key="k0", now=0.0, shape=(8, 8, 8), **rec_kw):
+    cache.begin(key, replica=0, now=now, est_bytes=artifact_bytes_modeled(shape))
+    return cache.complete(key, now=now, record=ok_record(**rec_kw), shape=shape)
+
+
+# --------------------------------------------------------- fault taxonomy ---
+
+
+class TestClassify:
+    def test_transient_and_permanent_axis(self):
+        assert classify(TransientExecutorError("preempted")) == TRANSIENT_FAULT
+        assert classify(PermanentExecutorError("miscompiled")) == PERMANENT_FAULT
+        assert classify(ValueError("garbage volume")) == PERMANENT_FAULT
+        assert classify(RuntimeError("unknown")) == PERMANENT_FAULT
+
+    def test_cache_faults_classify_transient(self):
+        # fail-open in progress: recompute fixes corruption, and compute
+        # does not need the cache — a retry genuinely helps
+        assert classify(CacheCorruptionError("k", "a", "b")) == TRANSIENT_FAULT
+        assert classify(CacheUnavailableError()) == TRANSIENT_FAULT
+        assert issubclass(CacheCorruptionError, CacheFault)
+        assert issubclass(CacheUnavailableError, CacheFault)
+
+    @pytest.mark.parametrize(
+        "exc", [KeyboardInterrupt(), SystemExit(1), GeneratorExit()]
+    )
+    def test_control_flow_base_exceptions_reraise(self, exc):
+        # Ctrl-C must never become a served "permanent_fault" record
+        with pytest.raises(type(exc)):
+            classify(exc)
+
+    def test_corruption_error_carries_evidence(self):
+        e = CacheCorruptionError("deadbeef" * 4, "aaaa" * 8, "bbbb" * 8)
+        assert e.key == "deadbeef" * 4
+        assert e.expected != e.actual
+
+
+# --------------------------------------------------------- key derivation ---
+
+
+class TestKeyDerivation:
+    def test_content_hash_is_pure_and_shape_aware(self):
+        a = vol(seed=1)
+        assert content_hash(a) == content_hash(a.copy())
+        assert content_hash(a) != content_hash(vol(seed=2))
+        # a reshaped view of the same bytes is a DIFFERENT volume
+        assert content_hash(a) != content_hash(a.reshape(16, 8, 32))
+
+    def test_stub_identity_and_uncacheable_none(self):
+        class Stub:
+            def __init__(self, shape, content_id=None):
+                self.shape = shape
+                self.content_id = content_id
+
+        assert content_hash(Stub((16, 16, 16), 3)) == content_hash(
+            Stub((16, 16, 16), 3)
+        )
+        assert content_hash(Stub((16, 16, 16), 3)) != content_hash(
+            Stub((16, 16, 16), 4)
+        )
+        # no token and no bytes -> no identity -> cache bypass, never an
+        # invented identity that aliases every request of one shape
+        assert content_hash(Stub((16, 16, 16))) is None
+        assert content_hash(object()) is None
+
+    def test_artifact_key_separates_every_axis(self):
+        c = content_hash(vol())
+        fp = model_fingerprint("model-a")
+        base = artifact_key(c, fp, "fp32", "full")
+        assert base == artifact_key(c, fp, "fp32", "full")
+        assert base != artifact_key(c, fp, "int8w", "full")
+        assert base != artifact_key(c, fp, "fp32", "subvolume")
+        assert base != artifact_key(c, model_fingerprint("model-b"), "fp32", "full")
+
+    def test_artifact_bytes_one_label_byte_per_voxel(self):
+        assert artifact_bytes_modeled((8, 8, 8)) == 512 + 256
+
+
+# ---------------------------------------------------- integrity/quarantine ---
+
+
+class TestIntegrity:
+    def test_store_then_verified_hit(self):
+        cache = ArtifactCache()
+        checksum = store_one(cache)
+        assert checksum is not None
+        look = cache.lookup("k0", now=1.0)
+        assert look.status == "hit"
+        assert look.entry.checksum == checksum
+        payload = cache.serve_payload(look.entry)
+        assert payload["status"] == "ok"
+        assert cache.stats.quarantined_served == 0
+
+    def test_corrupt_entry_quarantined_never_served(self):
+        cache = ArtifactCache()
+        store_one(cache)
+        entry = cache.entries["k0"]
+        ArtifactCache._corrupt(entry)
+        look = cache.lookup("k0", now=1.0)
+        # verification catches the flip at lookup: quarantined + miss
+        assert look.status == "miss"
+        assert cache.stats.quarantined == 1
+        assert "k0" not in cache.entries
+        assert cache.stats.quarantined_served == 0
+        assert cache.stats.bytes_stored == 0  # bytes credited back
+
+    def test_serve_payload_double_guard_raises_typed(self):
+        cache = ArtifactCache()
+        store_one(cache)
+        entry = cache.entries["k0"]
+        ArtifactCache._corrupt(entry)
+        # bypass lookup's verification to prove the serve-time guard holds
+        with pytest.raises(CacheCorruptionError):
+            cache.serve_payload(entry)
+        assert cache.stats.quarantined_served == 1  # the breach IS counted
+
+    def test_injected_corrupt_store_is_caught_on_next_hit(self):
+        # the fault window covers only the store: the poison lands at
+        # rest and the CLEAN read path's verification must catch it
+        plan = FaultPlan(
+            seed=0, rules=(FaultRule(kind="corrupt_entry", rate=1.0, t1=0.5),)
+        )
+        cache = ArtifactCache(fault_plan=plan)
+        store_one(cache)
+        look = cache.lookup("k0", now=1.0)
+        assert look.status == "miss"  # poisoned at rest, quarantined at read
+        assert cache.stats.quarantined == 1
+        assert cache.stats.quarantined_served == 0
+
+
+# ---------------------------------------------------------- negative cache ---
+
+
+class TestNegativeCache:
+    def test_permanent_fault_negative_cached_with_ttl(self):
+        cache = ArtifactCache(CacheConfig(negative_ttl_s=10.0))
+        cache.begin("k0", replica=0, now=0.0, est_bytes=512)
+        cache.complete(
+            "k0",
+            now=0.0,
+            record=ok_record(status="fail", fail_type=PERMANENT_FAULT),
+        )
+        assert cache.stats.negative_stores == 1
+        look = cache.lookup("k0", now=5.0)
+        assert look.status == "negative"
+        assert look.entry.fail_type == PERMANENT_FAULT
+        # verdict expires: the signature is re-tested via compute
+        look = cache.lookup("k0", now=10.0 + 1e-9)
+        assert look.status == "miss"
+        assert "k0" not in cache.entries
+
+    def test_retryable_outcomes_are_never_cached(self):
+        cache = ArtifactCache()
+        for ft in (TRANSIENT_FAULT, "service_timeout"):
+            cache.begin("k_" + ft, replica=0, now=0.0, est_bytes=512)
+            cache.complete(
+                "k_" + ft,
+                now=0.0,
+                record=ok_record(status="fail", fail_type=ft),
+            )
+        assert cache.stats.negative_stores == 0
+        assert cache.stats.stores == 0
+        assert not cache.entries  # placeholders gone, bytes balanced
+        assert cache.stats.bytes_stored == 0
+
+
+# ------------------------------------------------------------ LRU eviction ---
+
+
+class TestEviction:
+    def cache_of(self, capacity):
+        return ArtifactCache(CacheConfig(capacity_bytes=capacity))
+
+    def test_lru_order_is_deterministic(self):
+        one = artifact_bytes_modeled((8, 8, 8)) + 200  # ~artifact size
+        cache = self.cache_of(3 * one)
+        for i, t in enumerate([0.0, 1.0, 2.0]):
+            store_one(cache, key=f"k{i}", now=t)
+        cache.lookup("k0", now=3.0)  # refresh k0: k1 is now LRU
+        store_one(cache, key="k3", now=4.0)
+        assert "k1" not in cache.entries and "k0" in cache.entries
+        assert cache.stats.evictions >= 1
+        assert cache.stats.bytes_stored <= cache.budget.bytes_limit
+
+    def test_pinned_inflight_never_evicted(self):
+        one = artifact_bytes_modeled((8, 8, 8))
+        cache = self.cache_of(2 * one)
+        cache.begin("lead", replica=0, now=0.0, est_bytes=one)
+        # a store that would need the pinned bytes is REFUSED, not forced
+        store_one(cache, key="big", now=1.0, shape=(12, 12, 12))
+        assert "lead" in cache.entries  # the pin survived
+        assert cache.inflight_owner("lead") == 0
+        assert cache.stats.store_skips >= 1
+
+    def test_oversized_artifact_is_refused(self):
+        cache = self.cache_of(100)
+        store_one(cache, key="huge", now=0.0, shape=(64, 64, 64))
+        assert cache.stats.stores == 0
+        assert cache.stats.store_skips == 1
+        assert cache.stats.bytes_stored == 0
+
+    def test_abandon_balances_the_byte_account(self):
+        cache = ArtifactCache()
+        cache.begin("k0", replica=0, now=0.0, est_bytes=4096)
+        assert cache.stats.bytes_stored == 4096
+        cache.abandon("k0")
+        cache.abandon("k0")  # failover paths may abandon twice
+        assert cache.stats.bytes_stored == 0
+        assert cache.inflight_owner("k0") is None
+
+
+# ------------------------------------------------------- fail-open breaker ---
+
+
+class TestFailOpen:
+    def outage_cache(self, t0=0.0, t1=1e9, trip_after=3, cooldown_s=30.0):
+        plan = FaultPlan(
+            seed=0,
+            rules=(FaultRule(kind="cache_unavailable", rate=1.0, t0=t0, t1=t1),),
+        )
+        return ArtifactCache(
+            CacheConfig(breaker_trip_after=trip_after, breaker_cooldown_s=cooldown_s),
+            fault_plan=plan,
+        )
+
+    def test_unavailable_answers_fail_open_then_trip(self):
+        cache = self.outage_cache()
+        for i in range(3):
+            assert cache.lookup("k", now=float(i), request_id=i).status == "unavailable"
+        assert cache.breaker.open and cache.breaker.trips == 1
+        # open breaker: consults are skipped entirely (bypass, no tax)
+        assert cache.lookup("k", now=3.0, request_id=3).status == "bypass"
+        assert cache.stats.breaker_skips == 1
+        assert cache.stats.unavailable == 3
+
+    def test_half_open_probe_recloses_after_outage(self):
+        cache = self.outage_cache(t1=10.0, cooldown_s=5.0)
+        for i in range(3):
+            cache.lookup("k", now=float(i), request_id=i)
+        assert cache.breaker.open
+        # probe inside the outage window: still down, cooldown restarts
+        assert cache.lookup("k", now=8.0, request_id=10).status == "unavailable"
+        assert cache.breaker.open
+        # probe after the outage: healthy answer closes the breaker
+        assert cache.lookup("k", now=14.0, request_id=11).status == "miss"
+        assert not cache.breaker.open
+
+    def test_slow_cache_degrades_latency_not_correctness(self):
+        plan = FaultPlan(
+            seed=0,
+            rules=(FaultRule(kind="slow_cache", rate=1.0, slow_factor=8.0),),
+        )
+        cache = ArtifactCache(fault_plan=plan)
+        store_one(cache)
+        look = cache.lookup("k0", now=1.0)
+        assert look.status == "hit"  # the answer is still correct
+        assert look.slow_factor == 8.0
+        assert cache.stats.slow_consults >= 1
+
+    def test_store_during_outage_is_skipped_not_raised(self):
+        cache = self.outage_cache()
+        checksum = store_one(cache)
+        assert checksum is None
+        assert cache.stats.store_skips == 1
+        assert not cache.entries
+
+
+# ------------------------------------------- scheduler integration (unit) ---
+
+
+class TestSchedulerCache:
+    def cached_sched(self, cache=None, **cfg_kwargs):
+        cfg_kwargs.setdefault("max_queue_depth", 64)
+        sched = make_sched(**cfg_kwargs)
+        sched.cache = cache or ArtifactCache()
+        return sched
+
+    def drain_all(self, sched, now=10.0):
+        while True:
+            b = sched.next_batch(now=now)
+            if b is None:
+                return
+            now = sched.run_batch(b, now=now)
+
+    def test_single_flight_collapses_identical_concurrent(self):
+        sched = self.cached_sched()
+        v = vol(seed=7)
+        ids = [sched.submit(v.copy(), arrival_s=0.0) for _ in range(3)]
+        assert len(sched.queue) == 1  # one leader; followers never queue
+        self.drain_all(sched)
+        outcomes = {c.id: c.outcome for c in sched.completions}
+        assert sorted(outcomes[i] for i in ids) == [
+            "coalesced",
+            "coalesced",
+            "completed",
+        ]
+        assert sched.stats.coalesced == 2
+        assert sched.stats.conserved()
+        # byte-identical artifacts: one checksum on every record
+        sums = {
+            r.extra["artifact_checksum"]
+            for r in sched.engine.log.records
+            if "artifact_checksum" in r.extra
+        }
+        assert len(sums) == 1
+
+    def test_later_identical_request_hits_in_o_hash(self):
+        sched = self.cached_sched()
+        v = vol(seed=7)
+        sched.submit(v.copy(), arrival_s=0.0)
+        self.drain_all(sched)
+        rid = sched.submit(v.copy(), arrival_s=20.0)
+        hit = next(c for c in sched.completions if c.id == rid)
+        assert hit.outcome == "completed"
+        assert hit.record.cache_hit is True
+        assert hit.record.service_s == pytest.approx(sched.cache.cfg.verify_s)
+        assert sched.stats.cache_hits == 1
+        assert sched.stats.conserved()
+
+    def test_cancelled_leader_requeues_followers(self):
+        sched = self.cached_sched()
+        v = vol(seed=3)
+        lead = sched.submit(v.copy(), arrival_s=0.0)
+        sched.submit(v.copy(), arrival_s=0.0)
+        assert sched.cancel(lead) is not None
+        # the follower re-entered the queue as an independent request
+        assert len(sched.queue) == 1 and not sched._followers
+        assert sched.cache.inflight_owner(sched.queue[0].cache_key) is None
+        self.drain_all(sched)
+        assert sched.stats.conserved()
+
+    def test_evacuation_tears_down_single_flight_state(self):
+        sched = self.cached_sched()
+        v = vol(seed=3)
+        sched.submit(v.copy(), arrival_s=0.0)
+        sched.submit(v.copy(), arrival_s=0.0)
+        out = sched.evacuate(now=0.0)
+        assert len(out) == 2  # leader AND follower handed back
+        assert not sched.cache.inflight and not sched._followers
+        assert sched.stats.conserved()
+
+    def test_cache_summary_rollup_recovers_the_split(self):
+        sched = self.cached_sched()
+        v = vol(seed=7)
+        for _ in range(3):
+            sched.submit(v.copy(), arrival_s=0.0)
+        self.drain_all(sched)
+        sched.submit(v.copy(), arrival_s=20.0)
+        s = cache_summary(
+            sched.engine.log.records, store_stats=sched.cache.summary()
+        )
+        assert s.requests == 4
+        assert s.coalesced == 2
+        assert s.admission_hits == 1
+        assert s.cache_served == 3 and s.computed == 1
+        assert s.store_stats["quarantined_served"] == 0
+
+
+# ------------------------------------------------- degenerate-volume guard ---
+
+
+class TestDegenerateVolume:
+    def test_constant_3d_volume_raises_typed(self):
+        for bad in (
+            np.zeros((8, 8, 8), np.float32),
+            np.full((8, 8, 8), 7.0, np.float32),
+            np.full((8, 8, 8), np.nan, np.float32),
+        ):
+            with pytest.raises(conform_mod.DegenerateVolumeError):
+                conform_mod.conform(bad, (8, 8, 8))
+
+    def test_non_3d_garbage_keeps_its_legacy_path(self):
+        # the serving tier's garbage classification depends on resample
+        # raising a plain ValueError for malformed payloads
+        with pytest.raises(ValueError) as ei:
+            conform_mod.conform(np.zeros((7,), np.float32), (8, 8, 8))
+        assert not isinstance(ei.value, conform_mod.DegenerateVolumeError)
+
+    def test_pipeline_converts_to_failed_record(self):
+        from repro.core import pipeline as pipeline_mod
+
+        eng = make_sched().engine
+        res = pipeline_mod.run(eng.cfg, eng.params, np.zeros((16, 16, 16), np.float32))
+        assert res.segmentation is None
+        assert res.record.status == "fail"
+        assert res.record.fail_type == "degenerate_volume"
+
+    def test_degenerate_volume_is_permanent_through_serving(self):
+        sched = make_sched(execute=True)
+        sched.cache = ArtifactCache()
+        sched.submit(np.zeros((16, 16, 16), np.float32), arrival_s=0.0)
+        b = sched.next_batch(now=0.0)
+        sched.run_batch(b, now=0.0)
+        rec = next(r for r in sched.engine.log.records if r.request_id is not None)
+        assert rec.status == "fail"
+        assert rec.fail_type == "degenerate_volume"
+        assert sched.stats.conserved()
+
+
+# ------------------------------------------------------------ conform memo ---
+
+
+class TestConformMemo:
+    def test_fifo_bound_and_content_keying(self):
+        memo = ConformMemo(max_entries=2)
+        vols = [vol(seed=i) for i in range(3)]
+        for i, v in enumerate(vols):
+            memo.put(v, (16, 16, 16), i)
+        assert memo.get(vols[0], (16, 16, 16)) is None  # FIFO-evicted
+        assert memo.get(vols[2], (16, 16, 16)) == 2
+        # same bytes, different target shape: a different conform
+        assert memo.get(vols[2], (8, 8, 8)) is None
+
+    def test_identity_less_volumes_are_bypassed(self):
+        memo = ConformMemo()
+
+        class NoIdentity:
+            shape = (16, 16, 16)
+
+        memo.put(NoIdentity(), (16, 16, 16), "x")
+        assert not memo.entries
+        assert memo.get(NoIdentity(), (16, 16, 16)) is None

@@ -1,0 +1,363 @@
+"""Property suite for the artifact-cache tier under arbitrary seeded
+drives — the invariants that keep content addressing, single-flight, and
+fault injection from corrupting the PR 5-7 serving guarantees:
+
+  * **pinned in-flight never evicted**: whatever op sequence hits the
+    store (begins, stores, reads, abandons) under byte pressure, a
+    pinned placeholder survives until its leader completes or abandons,
+    and the byte account always equals the sum of live entries;
+  * **coalesced followers are byte-identical**: N identical concurrent
+    requests produce exactly ONE device execution; every follower's
+    record shares the leader's artifact checksum, status, and result;
+  * **Zipf determinism**: the content-skew process is a pure function of
+    (seed, index) — same seed -> byte-identical id streams and fleet
+    summaries, different seeds diverge;
+  * **conservation under cache-fault storms**: corrupt entries, outage
+    windows, and slow consults never lose a request — every arrival
+    reaches exactly one terminal outcome (coalesced included) and
+    corrupt bytes are NEVER served (``quarantined_served == 0``).
+
+Same double-drive structure as tests/test_resilience_properties.py: each
+``_check_*`` body runs under hypothesis when importable (CI) AND under
+an always-on deterministic grid (bare installs never skip)."""
+
+import random
+
+import pytest
+
+from repro.serving.cache import (
+    ArtifactCache,
+    CacheConfig,
+    artifact_bytes_modeled,
+)
+from repro.serving.fleet import (
+    FleetConfig,
+    FleetServiceModel,
+    simulate_fleet,
+)
+from repro.serving.resilience import FaultPlan, FaultRule
+from repro.serving.scheduler import PriorityClass, SchedulerConfig
+from repro.serving.simulator import STANDARD_MIX, zipf_content_id
+
+from test_cache import ok_record
+from test_scheduler import make_sched, vol
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: the grid fallback below still runs
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _cached_cfg(
+    seed,
+    burst_hz,
+    replicas,
+    skew,
+    universe,
+    corrupt_rate=0.0,
+    outage=None,
+    slow_rate=0.0,
+    capacity=2 * 1024 * 1024,
+    horizon_s=240.0,
+):
+    """A fleet with the shared artifact tier live under Zipf content skew
+    and an optional cache-fault storm (corruption, an outage window,
+    slow consults)."""
+    rules = []
+    if corrupt_rate > 0:
+        rules.append(FaultRule(kind="corrupt_entry", rate=corrupt_rate))
+    if outage is not None:
+        rules.append(
+            FaultRule(kind="cache_unavailable", rate=1.0, t0=outage[0], t1=outage[1])
+        )
+    if slow_rate > 0:
+        rules.append(FaultRule(kind="slow_cache", rate=slow_rate, slow_factor=6.0))
+    return FleetConfig(
+        name="cache-prop",
+        seed=seed,
+        horizon_s=horizon_s,
+        process="burst",
+        process_kwargs={
+            "base_hz": 2.0,
+            "burst_hz": burst_hz,
+            "period_s": 80.0,
+            "burst_len_s": 12.0,
+        },
+        mix=STANDARD_MIX,
+        replicas=replicas,
+        policy="cache_affinity",
+        scheduler=SchedulerConfig(
+            max_queue_depth=64,
+            admission_hbm_bytes=512 * 1024 * 1024,
+            max_batch_requests=8,
+            native_shapes=True,
+            classes={
+                "interactive": PriorityClass("interactive", 0, deadline_s=None),
+                "standard": PriorityClass("standard", 1, deadline_s=None),
+                "batch": PriorityClass("batch", 2, deadline_s=None),
+            },
+        ),
+        service=FleetServiceModel(base_s=0.1, batch_overhead_s=0.05),
+        cache=CacheConfig(
+            capacity_bytes=capacity,
+            breaker_trip_after=3,
+            breaker_cooldown_s=30.0,
+        ),
+        content_skew=skew,
+        content_universe=universe,
+        fault_plan=FaultPlan(seed=seed, rules=tuple(rules)) if rules else None,
+    )
+
+
+# ------------------------------------------------------ invariant bodies ---
+
+
+def _check_pinned_never_evicted(seed, n_ops, capacity_entries):
+    """Arbitrary seeded op soup against a byte-pressured store: a pinned
+    in-flight placeholder is NEVER an eviction victim, and after every
+    single op the byte account equals the sum of live entries."""
+    one = artifact_bytes_modeled((8, 8, 8))
+    cache = ArtifactCache(CacheConfig(capacity_bytes=capacity_entries * 2 * one))
+    rng = random.Random(seed)
+    pinned: set = set()
+    t = 0.0
+    for i in range(n_ops):
+        t += 1.0
+        key = f"k{rng.randrange(3 * capacity_entries)}"
+        op = rng.choice(("begin", "complete", "lookup", "abandon"))
+        if op == "begin":
+            if key not in cache.inflight:
+                cache.begin(key, replica=0, now=t, est_bytes=one)
+                pinned.add(key)
+        elif op == "complete" and key in pinned:
+            cache.complete(key, now=t, record=ok_record(), shape=(8, 8, 8))
+            pinned.discard(key)
+        elif op == "abandon" and key in pinned:
+            cache.abandon(key)
+            pinned.discard(key)
+        else:
+            cache.lookup(key, now=t, request_id=i)
+        # THE invariant: every live pin still has its placeholder
+        for p in pinned:
+            assert p in cache.entries, f"pinned {p} evicted at op {i}"
+            assert cache.inflight_owner(p) == 0
+        assert cache.stats.bytes_stored == sum(
+            e.nbytes for e in cache.entries.values()
+        ), f"byte account diverged at op {i}"
+    assert cache.stats.quarantined_served == 0
+
+
+def _check_coalesced_followers_byte_identical(seed, n_followers):
+    """N identical concurrent requests == 1 execution + N-1 coalesced
+    completions, every follower sharing the leader's artifact checksum,
+    status, and the SAME result object."""
+    sched = make_sched(max_queue_depth=128)
+    sched.cache = ArtifactCache()
+    v = vol(seed=seed)
+    ids = [sched.submit(v.copy(), arrival_s=0.0) for _ in range(n_followers + 1)]
+    assert len(sched.queue) == 1  # exactly one leader queued
+    now = 1.0
+    while (b := sched.next_batch(now=now)) is not None:
+        now = sched.run_batch(b, now=now)
+    comps = {c.id: c for c in sched.completions if c.id in ids}
+    outcomes = sorted(c.outcome for c in comps.values())
+    assert outcomes == ["coalesced"] * n_followers + ["completed"]
+    assert sched.stats.conserved()
+    leader = next(c for c in comps.values() if c.outcome == "completed")
+    for c in comps.values():
+        assert c.record.status == leader.record.status
+        assert (
+            c.record.extra["artifact_checksum"]
+            == leader.record.extra["artifact_checksum"]
+        )
+        assert c.result is leader.result  # the one artifact, not a copy
+        assert c.record.cache_hit or c.outcome == "completed"
+    assert sched.cache.stats.stores == 1
+
+
+def _check_zipf_determinism(seed, s, n, count):
+    """zipf_content_id is pure in (seed, index): same seed -> identical
+    streams, different seeds diverge, ids stay in range, and the skew is
+    real (the head id strictly out-draws the tail id for s > 0)."""
+    a = [zipf_content_id(seed, i, s, n) for i in range(count)]
+    b = [zipf_content_id(seed, i, s, n) for i in range(count)]
+    assert a == b
+    assert all(0 <= x < n for x in a)
+    c = [zipf_content_id(seed + 1, i, s, n) for i in range(count)]
+    assert a != c
+    head = sum(1 for x in a if x == 0)
+    tail = sum(1 for x in a if x == n - 1)
+    assert head >= tail
+
+
+def _check_same_seed_fleet_byte_identical(seed, replicas, skew):
+    """Same (code, seed) -> byte-identical fleet summaries with the cache
+    tier, Zipf skew, and a full fault storm all live."""
+    import json
+
+    runs = [
+        json.dumps(
+            simulate_fleet(
+                _cached_cfg(
+                    seed,
+                    30.0,
+                    replicas,
+                    skew,
+                    128,
+                    corrupt_rate=0.05,
+                    outage=(60.0, 100.0),
+                    slow_rate=0.02,
+                    horizon_s=160.0,
+                )
+            ).summary(),
+            sort_keys=True,
+        )
+        for _ in range(2)
+    ]
+    assert runs[0] == runs[1]
+
+
+def _check_conservation_under_cache_storm(
+    seed, burst_hz, replicas, skew, corrupt_rate, outage
+):
+    """Whatever the cache-fault storm does — corruption quarantines,
+    outage windows, breaker trips — every arrival reaches exactly one
+    terminal outcome (coalesced is the fifth), per-replica ledgers
+    balance, and corrupt bytes are NEVER served."""
+    rep = simulate_fleet(
+        _cached_cfg(
+            seed,
+            burst_hz,
+            replicas,
+            skew,
+            96,
+            corrupt_rate=corrupt_rate,
+            outage=outage,
+            capacity=512 * 1024,
+        )
+    )
+    fl = rep.fleet
+    assert fl.conserved()
+    for r in fl.replicas:
+        assert r.sched.stats.conserved(), f"replica {r.id}: {r.sched.stats}"
+    s = rep.summary()
+    req = s["requests"]
+    unique_terminal = (
+        req["refused"]
+        + req["no_replica"]
+        + req["completed"]
+        + req["demoted"]
+        + sum(req["rejected"].values())
+        + s["cache"]["coalesced"]
+    )
+    assert req["arrived"] == unique_terminal
+    assert s["cache"]["quarantined_served"] == 0
+    if corrupt_rate > 0.02:
+        assert s["cache"]["quarantined"] > 0  # the storm actually corrupted
+    if outage is not None:
+        assert s["cache"]["unavailable"] > 0  # ...and actually went down
+
+
+# ------------------------------------------------- hypothesis exploration ---
+
+if HAVE_HYPOTHESIS:
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_ops=st.integers(20, 120),
+        capacity_entries=st.integers(1, 6),
+    )
+    def test_pinned_never_evicted(seed, n_ops, capacity_entries):
+        _check_pinned_never_evicted(seed, n_ops, capacity_entries)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), n_followers=st.integers(1, 8))
+    def test_coalesced_followers_byte_identical(seed, n_followers):
+        _check_coalesced_followers_byte_identical(seed, n_followers)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        s=st.floats(0.5, 2.0),
+        n=st.integers(4, 512),
+        count=st.integers(50, 300),
+    )
+    def test_zipf_determinism(seed, s, n, count):
+        _check_zipf_determinism(seed, s, n, count)
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        replicas=st.integers(1, 3),
+        skew=st.floats(0.8, 1.4),
+    )
+    def test_same_seed_fleet_byte_identical(seed, replicas, skew):
+        _check_same_seed_fleet_byte_identical(seed, replicas, skew)
+
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        burst_hz=st.floats(10.0, 40.0),
+        replicas=st.integers(1, 4),
+        skew=st.floats(0.8, 1.5),
+        corrupt_rate=st.floats(0.0, 0.1),
+        outage=st.one_of(st.none(), st.just((60.0, 120.0))),
+    )
+    def test_conservation_under_cache_storm(
+        seed, burst_hz, replicas, skew, corrupt_rate, outage
+    ):
+        _check_conservation_under_cache_storm(
+            seed, burst_hz, replicas, skew, corrupt_rate, outage
+        )
+
+
+# ------------------------------------------------- deterministic fallback ---
+
+
+class TestGridFallback:
+    """Pinned corners of the cache property space — always executed, with
+    or without hypothesis, so no environment silently skips the artifact
+    tier's invariants."""
+
+    @pytest.mark.parametrize(
+        "seed,n_ops,capacity_entries",
+        [(0, 60, 2), (1, 120, 1), (2, 80, 4), (3, 40, 6)],
+    )
+    def test_pinned_never_evicted(self, seed, n_ops, capacity_entries):
+        _check_pinned_never_evicted(seed, n_ops, capacity_entries)
+
+    @pytest.mark.parametrize("seed,n_followers", [(0, 1), (1, 4), (2, 8)])
+    def test_coalesced_followers_byte_identical(self, seed, n_followers):
+        _check_coalesced_followers_byte_identical(seed, n_followers)
+
+    @pytest.mark.parametrize(
+        "seed,s,n,count",
+        [(0, 1.1, 256, 200), (1, 0.8, 16, 100), (2, 2.0, 64, 150)],
+    )
+    def test_zipf_determinism(self, seed, s, n, count):
+        _check_zipf_determinism(seed, s, n, count)
+
+    @pytest.mark.parametrize("seed,replicas,skew", [(0, 2, 1.1), (5, 3, 0.9)])
+    def test_same_seed_fleet_byte_identical(self, seed, replicas, skew):
+        _check_same_seed_fleet_byte_identical(seed, replicas, skew)
+
+    @pytest.mark.parametrize(
+        "seed,burst_hz,replicas,skew,corrupt_rate,outage",
+        [
+            (0, 30.0, 2, 1.1, 0.05, (60.0, 120.0)),
+            (1, 40.0, 4, 1.3, 0.1, None),
+            (2, 15.0, 1, 0.9, 0.0, (40.0, 80.0)),
+            (3, 25.0, 3, 1.0, 0.03, (60.0, 100.0)),
+        ],
+    )
+    def test_conservation_under_cache_storm(
+        self, seed, burst_hz, replicas, skew, corrupt_rate, outage
+    ):
+        _check_conservation_under_cache_storm(
+            seed, burst_hz, replicas, skew, corrupt_rate, outage
+        )
