@@ -328,10 +328,14 @@ class ArtifactCache:
         """The artifact's metadata payload for synthesizing a hit record
         — re-verified AT SERVE TIME as a second independent guard: if
         corrupt bytes ever got this far, ``quarantined_served`` counts
-        the breach and a typed error aborts the serve. The counter is
-        pinned to 0 by tests and the BENCH gate."""
+        the breach, the entry is quarantined (so the store is clean when
+        the caller's breach path recomputes as a fresh miss, and no
+        other lookup can keep hitting the corrupt bytes), and a typed
+        error aborts the serve. The counter is pinned to 0 by tests and
+        the BENCH gate."""
         if not self._verified(entry):
             self.stats.quarantined_served += 1
+            self._quarantine(entry)
             raise CacheCorruptionError(
                 entry.key, entry.checksum, self._checksum(entry.artifact)
             )
@@ -461,12 +465,19 @@ class ArtifactCache:
         becomes a negative entry with TTL, anything else (exhausted
         transient, timeout) just unpins — retrying later may succeed,
         so no verdict is cached. Returns the stored artifact checksum
-        (None when nothing was stored)."""
-        self.inflight.pop(key, None)
-        placeholder = self.entries.get(key)
-        if placeholder is not None and placeholder.pending:
-            self.entries.pop(key, None)
-            self.stats.bytes_stored -= placeholder.nbytes
+        (None when nothing was stored).
+
+        The unpin is OWNER-CHECKED: a stale leader (its pin abandoned by
+        drain/evacuate, the lead since re-taken by another replica) may
+        still complete here, and it must not steal the current leader's
+        pin or placeholder — it only stores (last-writer-wins), with the
+        displaced entry's bytes credited by ``_displace``."""
+        if self.inflight.get(key) == replica:
+            self.inflight.pop(key, None)
+            placeholder = self.entries.get(key)
+            if placeholder is not None and placeholder.pending:
+                self.entries.pop(key, None)
+                self.stats.bytes_stored -= placeholder.nbytes
         decision = self._decide(
             "store",
             now=now,
@@ -494,6 +505,7 @@ class ArtifactCache:
             if not self._make_room(nbytes, now):
                 self.stats.store_skips += 1  # everything pinned: no room
                 return None
+            self._displace(key)
             checksum = self._checksum(artifact)
             entry = _Entry(
                 key=key,
@@ -517,6 +529,7 @@ class ArtifactCache:
             if not self._make_room(nbytes, now):
                 self.stats.store_skips += 1
                 return None
+            self._displace(key)
             self.entries[key] = _Entry(
                 key=key,
                 artifact=b"",
@@ -533,6 +546,19 @@ class ArtifactCache:
         return None
 
     # -------------------------------------------------------------- eviction
+
+    def _displace(self, key: str) -> None:
+        """Credit and remove whatever entry currently sits at ``key``
+        immediately before a store lands there: last-writer-wins must
+        not leak the displaced entry's bytes from the account (a stale
+        entry surviving a quarantine race, or another leader's pending
+        placeholder being overwritten — its PIN stays with its owner,
+        only the bytes move). Called after ``_make_room``, so the room
+        check is conservative by the displaced entry's size — it may
+        evict one extra LRU entry, never under-reserve."""
+        existing = self.entries.pop(key, None)
+        if existing is not None:
+            self.stats.bytes_stored -= existing.nbytes
 
     def _make_room(self, need: int, now: float) -> bool:
         """Evict least-recently-used entries until ``need`` fits the

@@ -599,7 +599,32 @@ class RequestScheduler:
         outcome ``coalesced``, stamped ``cache_hit``, byte-identical
         payload (one shared record template, one shared result object,
         one artifact checksum). N identical concurrent requests ==
-        1 device execution + N-1 coalesced completions."""
+        1 device execution + N-1 coalesced completions.
+
+        Two guards before anything is stored or coalesced:
+
+        * a record whose (mode, precision) differ from the admission
+          form the artifact key was derived from must NOT be stored
+          under that key (``_release_stale_lead`` catches the demotion
+          and ladder paths at mutation time; this is the backstop for
+          any path that changes the effective form later);
+        * a retryable-class terminal failure (exhausted transient
+          budget, service timeout) is one leader's bad luck, not a
+          property of the content — followers re-enter the queue with
+          their OWN retry budgets instead of being stamped failed, so
+          one unlucky leader cannot amplify into N request failures.
+          (A permanent fault DOES coalesce: the verdict is content-
+          determined and would be negative-cached for all of them.)"""
+        stale = req.base_key is not None and (rec.mode, rec.precision) != (
+            req.base_key.mode,
+            req.base_key.precision,
+        )
+        retryable_failure = (
+            rec.status == "fail" and rec.fail_type in RETRYABLE_FAIL_TYPES
+        )
+        if stale or retryable_failure:
+            self._release_lead(req)
+            return
         ckey = req.cache_key
         checksum = self.cache.complete(
             ckey,
@@ -804,6 +829,26 @@ class RequestScheduler:
         req.key = key
         req.bytes_priced = bts
         req.demoted = True
+        self._release_stale_lead(req)
+
+    def _release_stale_lead(self, req: ServeRequest) -> None:
+        """A leader's artifact key was derived at admission from its
+        resolved (mode, precision) — the axes cache.artifact_key bakes in
+        BECAUSE they change the artifact. Admission demotion and the
+        breaker ladder mutate ``req.key`` after that derivation, so a
+        demoted or ladder-degraded leader would produce a different
+        artifact than the key it pinned promises: release the lead
+        (pin abandoned, followers re-queued as independent requests)
+        so the wrong-key store can never land. No-op while the
+        effective (mode, precision) still match the derivation basis
+        (``base_key`` — the signature the admission consult keyed on)."""
+        if req.cache_key is None or req.key is None or req.base_key is None:
+            return
+        if (req.key.mode, req.key.precision) != (
+            req.base_key.mode,
+            req.base_key.precision,
+        ):
+            self._release_lead(req)
 
     def _breaker_form(
         self, req: ServeRequest, rung: int
@@ -840,6 +885,7 @@ class RequestScheduler:
         req.demoted = (
             req.key.mode == "subvolume" and req.base_key.mode != "subvolume"
         )
+        self._release_stale_lead(req)
 
     # ------------------------------------------------------------ service
 

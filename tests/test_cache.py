@@ -174,6 +174,21 @@ class TestIntegrity:
             cache.serve_payload(entry)
         assert cache.stats.quarantined_served == 1  # the breach IS counted
 
+    def test_serve_payload_breach_quarantines_the_entry(self):
+        cache = ArtifactCache()
+        store_one(cache)
+        entry = cache.entries["k0"]
+        ArtifactCache._corrupt(entry)
+        with pytest.raises(CacheCorruptionError):
+            cache.serve_payload(entry)
+        # the corrupt entry left the store WITH its bytes credited: the
+        # breach path's recompute begins on a clean key, and no other
+        # lookup can keep hitting the corrupt bytes
+        assert "k0" not in cache.entries
+        assert cache.stats.bytes_stored == 0
+        assert cache.stats.quarantined == 1
+        assert cache.lookup("k0", now=1.0).status == "miss"
+
     def test_injected_corrupt_store_is_caught_on_next_hit(self):
         # the fault window covers only the store: the poison lands at
         # rest and the CLEAN read path's verification must catch it
@@ -267,6 +282,35 @@ class TestEviction:
         cache.abandon("k0")  # failover paths may abandon twice
         assert cache.stats.bytes_stored == 0
         assert cache.inflight_owner("k0") is None
+
+    def test_last_writer_wins_store_credits_the_displaced_entry(self):
+        cache = ArtifactCache()
+        store_one(cache, key="k0", now=0.0)
+        store_one(cache, key="k0", now=1.0)  # overwrite, same key
+        assert cache.stats.stores == 2
+        # the displaced entry's bytes were credited back: the account
+        # holds exactly one entry's worth, not two
+        assert cache.stats.bytes_stored == cache.entries["k0"].nbytes
+
+    def test_stale_leader_complete_cannot_steal_the_current_pin(self):
+        one = artifact_bytes_modeled((8, 8, 8))
+        cache = ArtifactCache()
+        cache.begin("k", replica=0, now=0.0, est_bytes=one)
+        cache.abandon("k")  # replica 0 evacuated: its pin is gone
+        cache.begin("k", replica=1, now=1.0, est_bytes=one)
+        # the stale leader's complete is last-writer-wins on the STORE,
+        # but the current leader's pin must survive it
+        cache.complete(
+            "k", now=2.0, record=ok_record(), shape=(8, 8, 8), replica=0
+        )
+        assert cache.inflight_owner("k") == 1
+        cache.complete(
+            "k", now=3.0, record=ok_record(), shape=(8, 8, 8), replica=1
+        )
+        assert cache.inflight_owner("k") is None
+        # after both stores the byte account holds exactly one entry
+        assert cache.stats.bytes_stored == cache.entries["k"].nbytes
+        assert cache.lookup("k", now=4.0).status == "hit"
 
 
 # ------------------------------------------------------- fail-open breaker ---
@@ -398,6 +442,81 @@ class TestSchedulerCache:
         assert len(out) == 2  # leader AND follower handed back
         assert not sched.cache.inflight and not sched._followers
         assert sched.stats.conserved()
+
+    def test_demoted_leader_never_stores_under_admission_key(self):
+        """The artifact key is derived from the admission-resolved
+        (mode, precision); admission demotion changes the mode AFTER
+        that derivation, so a demoted leader must release its lead —
+        a subvolume artifact stored under the full-mode key would be
+        silently served to every future full-mode request."""
+        probe = make_sched()
+        full = probe._price("full", (32, 32, 32), "fp32")
+        sub = probe._price("subvolume", (32, 32, 32), "fp32")
+        assert sub < full
+        cache = ArtifactCache()
+        # cap between the two prices: the seed demotes at batch formation
+        sched = self.cached_sched(
+            cache=cache, admission_hbm_bytes=(sub + full) // 2
+        )
+        v = vol(shape=(32, 32, 32), seed=11)
+        sched.submit(v.copy(), mode="full", arrival_s=0.0)
+        sched.submit(v.copy(), mode="full", arrival_s=0.0)  # follower
+        ckey = sched.queue[0].cache_key
+        assert ckey is not None
+        self.drain_all(sched)
+        # the lead was released at demotion time: nothing stored under
+        # the full-mode key, the pin is gone, and the follower computed
+        # independently instead of coalescing onto the demoted artifact
+        assert ckey not in cache.entries
+        assert cache.stats.stores == 0
+        assert not cache.inflight
+        assert sched.stats.coalesced == 0
+        assert sched.stats.demoted == 2
+        assert sched.stats.conserved()
+        assert cache.lookup(ckey, now=100.0).status == "miss"
+
+    def test_leader_retry_exhaustion_frees_followers(self):
+        """A leader that exhausts its retry budget on TRANSIENT faults
+        must not stamp its followers failed: they re-enter the queue
+        with their own budgets (one leader's bad luck is not a property
+        of the content). A permanent fault still coalesces — that
+        verdict IS content-determined and would be negative-cached."""
+        from repro.serving.resilience import ResiliencePolicy, RetryPolicy
+        from repro.serving.scheduler import RequestScheduler, SchedulerConfig
+        from repro.serving.simulator import ServiceModel, VirtualClock
+        from test_scheduler import make_engine
+
+        sched = RequestScheduler(
+            make_engine(),
+            SchedulerConfig(native_shapes=True),
+            clock=VirtualClock(),
+            service_model=ServiceModel(),
+            execute=False,
+            resilience=ResiliencePolicy(
+                retry=RetryPolicy(max_attempts=2, seed=0), breaker=None
+            ),
+            fault_plan=FaultPlan(
+                seed=0, rules=(FaultRule(kind="transient", rate=1.0),)
+            ),
+            cache=ArtifactCache(),
+        )
+        v = vol(seed=5)
+        sched.submit(v.copy(), arrival_s=0.0)
+        fol = sched.submit(v.copy(), arrival_s=0.0)
+        assert sched._followers  # it really attached before the storm
+        comps = {c.id: c for c in sched.drain()}
+        assert sched.stats.coalesced == 0
+        # the follower served independently and spent its OWN budget
+        assert comps[fol].outcome == "completed"
+        assert comps[fol].record.cache_hit is False
+        assert comps[fol].record.fail_type == TRANSIENT_FAULT
+        assert comps[fol].record.attempt == 1
+        assert sched.stats.conserved()
+        # nothing cached, nothing pinned: a retryable verdict is not
+        # a verdict about the content
+        assert not sched.cache.inflight
+        assert sched.cache.stats.stores == 0
+        assert sched.cache.stats.negative_stores == 0
 
     def test_cache_summary_rollup_recovers_the_split(self):
         sched = self.cached_sched()
