@@ -89,6 +89,63 @@ def bench(seed: int = 0) -> list:
     return rows
 
 
+def bench_batched(seed: int = 0) -> list:
+    """(name, us_per_call, hbm_bytes_modeled, note) rows for the gated
+    BENCH_2.json ``batched`` section — the N-volume batch axis made
+    visible in two families of deterministic keys:
+
+      * ``batched_<backend>_b{1,2,4}``: modeled HBM bytes of one
+        gwm_light 256^3 forward at each batch size per backend
+        (us_per_call rides at 0.0 — these are analytic byte rows, gated
+        by the any-growth hbm rule). Sub-linear growth across b1/b2/b4
+        IS the headline bugfix: the weight stream amortizes, so b4 is
+        strictly under 4x b1 for every backend with a weight term;
+      * ``serving_<preset>_batched_p{50,99}``: virtual-clock latency of
+        each committed load scenario re-run with
+        ``SchedulerConfig.batched_dispatch=True`` on the SAME seed and
+        trace — the overload pair against ``serving_overload_p{50,99}``
+        is the acceptance comparison (batched p99 must not exceed the
+        serialized-dispatch p99).
+    """
+    from repro.core.meshnet import PAPER_MODELS
+    from repro.serving import simulator as sim
+    from repro.telemetry import traffic
+
+    cfg = PAPER_MODELS["gwm_light"]
+    vol = (256, 256, 256)
+    byte_models = (
+        ("xla", traffic.meshnet_xla_bytes),
+        ("pallas_fused", traffic.meshnet_fused_bytes),
+        ("pallas_megakernel", traffic.meshnet_megakernel_bytes),
+        ("streaming", traffic.meshnet_streaming_bytes),
+    )
+    rows = []
+    for name, fn in byte_models:
+        b1 = fn(cfg, vol)
+        for n in (1, 2, 4):
+            bn = fn(cfg, vol, batch=n)
+            rows.append(
+                (
+                    f"batched_{name}_b{n}",
+                    0.0,
+                    bn,
+                    f"gwm_light 256^3; {bn / (n * b1):.4f}x of {n} serial forwards",
+                )
+            )
+    scenarios = [f"{p}_batched" for p in sim.PRESETS]
+    for name, s in run_scenarios(scenarios, seed=seed).items():
+        lat = s["latency_ms"]
+        req = s["requests"]
+        note = (
+            f"served={req['completed'] + req['demoted']}"
+            f";demoted={req['demoted']};refused={req['refused']}"
+            f";conserved={req['conserved']}"
+        )
+        rows.append((f"serving_{name}_p50", lat["p50"] * 1e3, None, note))
+        rows.append((f"serving_{name}_p99", lat["p99"] * 1e3, None, note))
+    return rows
+
+
 def run_fleet_scenarios(scenarios, seed: int = 0, horizon_s=None):
     """name -> summary dict for each requested fleet preset."""
     from repro.serving import fleet as fl
@@ -265,6 +322,7 @@ def soak(
     seed: int = 0,
     fault_rate: float = 0.0,
     content_skew: float | None = None,
+    batched: bool = False,
 ) -> int:
     """The CI soak: one long virtual window of the overload scenario.
     Asserts the hard serving invariants — conservation (zero lost
@@ -277,13 +335,17 @@ def soak(
     arrival stream draws Zipf-skewed content ids — the summary then
     carries the ``cache`` block and the soak additionally asserts the
     cache invariants (zero corrupt serves, conservation with coalesced
-    as a terminal state). Returns a process exit code."""
+    as a terminal state). With ``--batched`` the same window runs under
+    ``SchedulerConfig.batched_dispatch`` — every dispatch group is one
+    batched launch — and the identical conservation/shedding invariants
+    must hold. Returns a process exit code."""
+    scenario = "overload_batched" if batched else "overload"
     if fault_rate > 0.0 or content_skew is not None:
         import dataclasses
 
         from repro.serving import simulator as sim
 
-        cfg = sim.preset("overload", seed=seed, horizon_s=horizon_s)
+        cfg = sim.preset(scenario, seed=seed, horizon_s=horizon_s)
         if fault_rate > 0.0:
             from repro.serving.resilience import (
                 BreakerConfig,
@@ -318,7 +380,7 @@ def soak(
             )
         s = sim.simulate(_engine(), cfg).summary()
     else:
-        s = run_scenarios(["overload"], seed=seed, horizon_s=horizon_s)["overload"]
+        s = run_scenarios([scenario], seed=seed, horizon_s=horizon_s)[scenario]
     print(json.dumps(s, indent=1, sort_keys=True))
     req = s["requests"]
     ok = True
@@ -431,6 +493,13 @@ def main(argv=None) -> int:
         "128-volume universe; the soak then asserts the cache invariants "
         "(zero corrupt serves, conservation with coalesced)",
     )
+    ap.add_argument(
+        "--batched",
+        action="store_true",
+        help="with --soak: run the window with batched dispatch enabled "
+        "(every admission group serves as ONE batched launch) and assert "
+        "the same conservation/shedding invariants",
+    )
     args = ap.parse_args(argv)
     if args.soak is not None:
         return soak(
@@ -438,6 +507,7 @@ def main(argv=None) -> int:
             seed=args.seed,
             fault_rate=args.fault_rate,
             content_skew=args.content_skew,
+            batched=args.batched,
         )
 
     if args.fleet:

@@ -32,8 +32,8 @@ while fp32 rows keep their legacy un-suffixed names — so the per-key
 diff above always compares like-for-like precision (an int8w run can
 never mask an fp32 regression, and vice versa).
 
-Virtual sections (``serving``, ``serving_fleet``, ``serving_resilience``):
-these rows are *virtual-clock* numbers
+Virtual sections (``serving``, ``serving_fleet``, ``serving_resilience``,
+``serving_cache``, ``batched``): these rows are *virtual-clock* numbers
 from the deterministic load simulator — identical on any machine by
 construction — so they are (a) EXCLUDED from the machine-speed median
 (they would drag it toward 1.0 and make real timing keys fail on slow
@@ -64,7 +64,7 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_2.json")
 #: sections whose us_per_call is virtual-clock (deterministic simulator
 #: output): excluded from machine normalization, gated absolutely.
 VIRTUAL_SECTIONS = frozenset(
-    {"serving", "serving_fleet", "serving_resilience", "serving_cache"}
+    {"serving", "serving_fleet", "serving_resilience", "serving_cache", "batched"}
 )
 
 

@@ -26,6 +26,12 @@ Sections:
                   acceptance scenario (serving/resilience.py): unrecovered
                   faults, timeout reaps, lost/double-served (must stay 0),
                   and the storm's p99 — gated absolutely like [serving]
+  [batched]       the N-volume batch axis: modeled bytes per forward at
+                  batch 1/2/4 per backend (weight stream amortized — b4
+                  strictly under 4x b1), plus virtual-clock p50/p99 of
+                  every committed load scenario re-run with batched
+                  dispatch on the same seed/trace — gated absolutely
+                  like [serving] (bench_serving.bench_batched)
   [serving_cache] lower-is-better virtual keys of the artifact-cache
                   acceptance scenario (serving/cache.py): miss rate under
                   Zipf skew, quarantined-served (must stay 0), uncollapsed
@@ -62,6 +68,7 @@ MEASURED_SECTIONS = (
     "executors",
     "traffic",
     "serving",
+    "batched",
     "serving_fleet",
     "serving_resilience",
     "serving_cache",
@@ -121,6 +128,19 @@ def run_serving() -> list:
     print("\n[serving] name,us_per_call,hbm_bytes_modeled,derived")
     print("# virtual-clock latencies (deterministic discrete-event simulator,")
     print("# seed 0) — gated ABSOLUTELY by check_regression.py, no machine norm")
+    for name, us, hbm, note in rows:
+        _csv(name, us, hbm, note)
+    return rows
+
+
+def run_batched() -> list:
+    from benchmarks import bench_serving
+
+    rows = bench_serving.bench_batched()
+    print("\n[batched] name,us_per_call,hbm_bytes_modeled,derived")
+    print("# the N-volume batch axis: analytic bytes per forward at batch")
+    print("# 1/2/4 (weight stream amortized) + virtual-clock latencies of")
+    print("# the batched-dispatch scenarios — gated ABSOLUTELY, no machine norm")
     for name, us, hbm, note in rows:
         _csv(name, us, hbm, note)
     return rows
@@ -241,6 +261,7 @@ SECTIONS = {
     "executors": run_executors,
     "traffic": run_traffic,
     "serving": run_serving,
+    "batched": run_batched,
     "serving_fleet": run_serving_fleet,
     "serving_resilience": run_serving_resilience,
     "serving_cache": run_serving_cache,

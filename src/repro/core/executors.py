@@ -11,6 +11,14 @@ The pipeline (core/pipeline.py) separates two orthogonal choices:
     ``apply(params, x, cfg) -> logits`` with ``x: (B, D, H, W[, C])`` and
     logits ``(B, D, H, W, num_classes)``, numerically equal to
     ``meshnet.apply`` in eval mode (tests/test_executors.py enforces this).
+    The leading ``B`` is a true N-volume batch axis on every backend — a
+    leading dim the XLA/fused kernels carry through, the innermost grid
+    axis of the megakernel (per-segment weight DMA amortizes across the
+    whole batch), and a second mesh axis for the sharded family when the
+    host has spare devices beyond the slab count — and each batch member's
+    logits equal its unbatched forward (tests/test_batched.py). The traffic
+    models price the amortization: ``hbm_bytes(batch=N) < N *
+    hbm_bytes(batch=1)`` whenever a weight-stream term exists.
 
 Built-in executors (DESIGN.md §2):
 
@@ -74,7 +82,9 @@ from repro.kernels import megakernel, ops, quantize
 from repro.telemetry import traffic
 
 # (params, x, cfg, precision) -> logits; x (B, D, H, W[, C]) ->
-# (B, D, H, W, classes). ``precision`` is the storage policy
+# (B, D, H, W, classes). B is an arbitrary batch size (>= 1): backends
+# MUST treat the leading dim as independent volumes whose per-member
+# logits match the unbatched forward. ``precision`` is the storage policy
 # (kernels/quantize.py: "fp32" | "bf16" | "int8w"); params may arrive raw
 # fp32 or already prepared (quantize.prepare_params is idempotent).
 ApplyFn = Callable[[Any, jax.Array, MeshNetConfig, str], jax.Array]

@@ -64,6 +64,9 @@ except AttributeError:  # pragma: no cover
 #: the Z-mesh axis name the sharded executors use.
 SPATIAL_AXIS = "z"
 
+#: the batch-mesh axis name used when device counts allow a second axis.
+BATCH_AXIS = "b"
+
 
 class ShardGeometryError(ValueError):
     """The requested slab geometry cannot run: the Z dim does not divide
@@ -95,6 +98,45 @@ def mesh_for(num_devices: int | None = None, axis: str = SPATIAL_AXIS) -> Mesh:
             f"sharded executor wants {n} devices; host has {len(devs)}"
         )
     return Mesh(np.array(devs[:n]), (axis,))
+
+
+@functools.lru_cache(maxsize=32)
+def mesh_for_batched(
+    batch_shards: int,
+    num_devices: int,
+    axis: str = SPATIAL_AXIS,
+    batch_axis: str = BATCH_AXIS,
+) -> Mesh:
+    """A 2-D (batch, Z) mesh: ``batch_shards`` rows of ``num_devices``
+    Z-slab columns. Each batch row runs the full slab pipeline on its
+    share of the leading dim; halo ``ppermute``s stay within a row (the
+    named Z axis), so the slab numerics are identical to the 1-D mesh.
+    Cached like ``mesh_for`` so repeat (batch, slab) signatures share one
+    Mesh object and one compiled executable."""
+    total = batch_shards * num_devices
+    devs = jax.devices()
+    if total > len(devs):
+        raise ShardGeometryError(
+            f"batched sharded executor wants {batch_shards}x{num_devices} "
+            f"devices; host has {len(devs)}"
+        )
+    return Mesh(
+        np.array(devs[:total]).reshape(batch_shards, num_devices),
+        (batch_axis, axis),
+    )
+
+
+def auto_batch_shards(batch: int, num_devices: int) -> int:
+    """The largest batch-axis size a host can add on top of ``num_devices``
+    Z slabs: the biggest divisor of ``batch`` with ``k * num_devices``
+    devices available. 1 when the host has no spare devices (the 1-D
+    mesh), so single-device containers and exactly-sized hosts keep the
+    legacy layout."""
+    spare = jax.device_count() // max(num_devices, 1)
+    for k in range(min(int(batch), spare), 1, -1):
+        if batch % k == 0:
+            return k
+    return 1
 
 
 def _fetch_slab(x: jax.Array, offset: int, axis_name: str, n: int) -> jax.Array:
@@ -303,6 +345,7 @@ def sharded_executor_apply(
     num_devices: int | None = None,
     axis: str = SPATIAL_AXIS,
     precision: str = "fp32",
+    batch_shards: int | None = None,
 ) -> jax.Array:
     """Z-sharded MeshNet forward through the named inner backend.
 
@@ -313,6 +356,12 @@ def sharded_executor_apply(
     per precision policy: the layer-wise inners exchange bf16 halos, the
     megakernel inner's one-shot RF fetch ships the int8 input under
     "int8w" (tests/test_precision.py).
+
+    ``batch_shards`` adds the batch as a second mesh axis where device
+    counts allow: ``batch_shards * num_devices`` devices arranged as a
+    (batch, Z) grid, each row serving ``B / batch_shards`` volumes.
+    ``None`` picks ``auto_batch_shards`` (1 unless the host has spare
+    devices beyond the slab count); pass 1 to force the legacy 1-D mesh.
     """
     if inner not in _SLAB_FNS:
         raise KeyError(
@@ -326,8 +375,17 @@ def sharded_executor_apply(
             f"Z dim {x.shape[1]} not divisible by {n} slabs — pick a device "
             "count that divides the volume depth"
         )
-    mesh = mesh_for(n, axis)
-    in_spec = P(None, axis, None, None, None)
+    bs = auto_batch_shards(x.shape[0], n) if batch_shards is None else int(batch_shards)
+    if bs > 1:
+        if x.shape[0] % bs:
+            raise ShardGeometryError(
+                f"batch {x.shape[0]} not divisible by {bs} batch shards"
+            )
+        mesh = mesh_for_batched(bs, n, axis)
+        in_spec = P(BATCH_AXIS, axis, None, None, None)
+    else:
+        mesh = mesh_for(n, axis)
+        in_spec = P(None, axis, None, None, None)
     slab_fn = _SLAB_FNS[inner]
     if precision != "fp32":
         # prepare once, outside shard_map, so every slab streams the same

@@ -178,16 +178,24 @@ def _segment_hbm_bytes(
     padded: tuple[int, int, int],
     dtype_bytes: int,
     widths: Optional[Widths] = None,
+    batch: int = 1,
 ) -> int:
-    """Modeled HBM bytes of one segment: haloed tile reads, per-grid-step
-    weight streams, and the central-region write. The ONE formula shared
-    by ``MegakernelPlan.hbm_bytes`` (what telemetry/benchmarks report) and
-    the planner's DP objective — so the plan the DP picks is the minimum
-    of the model it reports. ``widths`` prices each tensor role at its
-    policy byte width: window reads at the input width for the first
-    segment and the staging width after, weight streams at the weight
-    width, the write at the staging width (activation width for the
-    fused-head logits)."""
+    """Modeled HBM bytes of one segment: haloed tile reads, per-spatial-
+    tile weight streams, and the central-region write. The ONE formula
+    shared by ``MegakernelPlan.hbm_bytes`` (what telemetry/benchmarks
+    report) and the planner's DP objective — so the plan the DP picks is
+    the minimum of the model it reports. ``widths`` prices each tensor
+    role at its policy byte width: window reads at the input width for the
+    first segment and the staging width after, weight streams at the
+    weight width, the write at the staging width (activation width for the
+    fused-head logits).
+
+    ``batch`` scales only the data terms (every batch element's windows
+    are read and its central region written), NOT the weight stream: the
+    launch grid iterates batch innermost, so each segment's weight blocks
+    stay resident across the whole batch loop and are re-fetched only
+    when the spatial tile advances — one weight stream per launch,
+    amortized over all N members."""
     act, wt, inp, stg = widths or (dtype_bytes,) * 4
     ib = inp if seg.start == 0 else stg
     ob = act if seg.fuse_head else stg
@@ -197,9 +205,9 @@ def _segment_hbm_bytes(
     wgt += 27 * seg.channels**2 * wt * (len(seg.dilations) - 1)
     if seg.fuse_head:
         wgt += seg.channels * seg.num_classes * wt
-    total = ntiles * (window * seg.cin * ib + wgt)
-    total += math.prod(padded) * seg.cout * ob
-    return total
+    data = ntiles * window * seg.cin * ib
+    data += math.prod(padded) * seg.cout * ob
+    return batch * data + ntiles * wgt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,11 +241,17 @@ class MegakernelPlan:
         return tuple(max(c, p) + 2 * nxt.halo for c, p in zip(cur, pad))
 
     def hbm_bytes(self, batch: int = 1, dtype_bytes: int = 4) -> int:
-        """Modeled HBM traffic of one forward: the input pad round-trip,
-        then per segment the haloed tile reads, the weight streams, and the
-        central-region writes (staging halo borders are allocated but never
-        written, so they cost nothing). A plan optimized for a precision
-        policy prices with its own per-role widths (``dtype_bytes`` is the
+        """Modeled HBM traffic of one batched forward: the input pad
+        round-trip, then per segment the haloed tile reads, the weight
+        streams, and the central-region writes (staging halo borders are
+        allocated but never written, so they cost nothing). Data terms
+        scale with ``batch``; the per-segment weight stream is charged
+        once per launch — batch iterates innermost in the kernel grid, so
+        weights DMA'd for a spatial tile serve every batch element
+        (subadditive: ``hbm_bytes(N) < N * hbm_bytes(1)`` whenever the
+        weight term is nonzero; ``batch=1`` is byte-identical to the
+        pre-batching model). A plan optimized for a precision policy
+        prices with its own per-role widths (``dtype_bytes`` is the
         legacy uniform knob and is ignored when ``widths`` is set)."""
         widths = self.widths or (dtype_bytes,) * 4
         inp = widths[2]
@@ -245,12 +259,14 @@ class MegakernelPlan:
         first = self.segments[0]
         p0 = self.padded(first)
         # host-side zero-pad of the input volume (read + padded write, at
-        # the policy's input storage width)
-        total += math.prod(self.vol) * first.cin * inp
-        total += math.prod(t + 2 * first.halo for t in p0) * first.cin * inp
+        # the policy's input storage width) — per batch element
+        total += batch * math.prod(self.vol) * first.cin * inp
+        total += batch * math.prod(t + 2 * first.halo for t in p0) * first.cin * inp
         for seg in self.segments:
-            total += _segment_hbm_bytes(seg, self.padded(seg), dtype_bytes, widths)
-        return batch * total
+            total += _segment_hbm_bytes(
+                seg, self.padded(seg), dtype_bytes, widths, batch=batch
+            )
+        return total
 
 
 def plan(
@@ -264,6 +280,7 @@ def plan(
     dtype_bytes: int = 4,
     precision: Optional[str] = None,
     int8_staging: Optional[bool] = None,
+    batch: int = 1,
 ) -> MegakernelPlan:
     """Choose segment boundaries and per-axis tiles by DP over modeled
     HBM traffic, subject to each segment's working set fitting VMEM.
@@ -274,6 +291,14 @@ def plan(
     larger tiles and fewer halo re-fetches on top of the per-byte cut.
     ``precision=None`` keeps the legacy uniform-``dtype_bytes`` model
     (byte-identical fp32 plans).
+
+    ``batch`` co-optimizes the tile shape against the batch size: the DP
+    objective scales the data terms by N while charging the weight stream
+    once per launch, so at larger batches the planner leans toward the
+    tile that minimizes halo re-reads rather than weight re-streams. The
+    VMEM constraint is unchanged — the grid iterates one (batch element,
+    tile) at a time, so the working set never grows with batch and a plan
+    feasible at batch 1 stays feasible at any batch.
 
     Raises with an actionable message when even a single layer at the
     smallest tile exceeds the budget (channel width is the only lever
@@ -289,6 +314,7 @@ def plan(
         tuple(int(v) for v in vol),
         int(vmem_budget),
         plan_widths(precision, dtype_bytes, int8_staging),
+        int(batch),
     )
 
 
@@ -301,6 +327,7 @@ def _plan_cached(
     vol: tuple[int, int, int],
     vmem_budget: int,
     widths: Widths,
+    batch: int = 1,
 ) -> MegakernelPlan:
     n = len(dils)
     act, wt, inp, stg = widths
@@ -381,11 +408,13 @@ def _plan_cached(
             ntiles = (
                 (padded[0] / grids[0]) * (padded[1] / grids[1]) * (padded[2] / grids[2])
             )
-            cost = ntiles * (prods[0] * (cin * ib) + wgt_h)
-            cost += padded[0] * padded[1] * padded[2] * (cout * ob)
+            # data terms × batch, weight stream once per launch — the
+            # same split hbm_bytes reports (batch innermost in the grid)
+            cost = batch * ntiles * (prods[0] * (cin * ib)) + ntiles * wgt_h
+            cost += batch * padded[0] * padded[1] * padded[2] * (cout * ob)
             if i == 0:
-                cost += math.prod(vol) * (cin * inp)
-                cost += (
+                cost += batch * math.prod(vol) * (cin * inp)
+                cost += batch * (
                     (padded[0] + 2 * h) * (padded[1] + 2 * h) * (padded[2] + 2 * h)
                 ) * (cin * inp)
             cost = np.where(vmem <= vmem_budget, cost, INF)
@@ -429,6 +458,7 @@ def plan_for_config(
     dtype_bytes: int = 4,
     precision: Optional[str] = None,
     int8_staging: Optional[bool] = None,
+    batch: int = 1,
 ) -> MegakernelPlan:
     """``plan`` from a MeshNetConfig-shaped object. With a ``precision``,
     int8 staging defaults to whether the config has BatchNorm statistics
@@ -445,6 +475,7 @@ def plan_for_config(
         dtype_bytes=dtype_bytes,
         precision=precision,
         int8_staging=int8_staging,
+        batch=batch,
     )
 
 
@@ -510,7 +541,12 @@ def _segment_kernel(
     idx += 1 if quant_out else 0
     sem = scratch[idx]
 
-    bi, zi, yi, xi = (pl.program_id(i) for i in range(4))
+    # batch is the INNERMOST grid axis: the weight/bias/affine blocks use
+    # constant index maps, so between consecutive batch steps no input
+    # block index changes and the segment's weights stay VMEM-resident —
+    # one weight stream per spatial tile, amortized over the whole batch
+    # (the split _segment_hbm_bytes prices).
+    zi, yi, xi, bi = (pl.program_id(i) for i in range(4))
     ids = (zi, yi, xi)
     tile = seg.tile
     h = seg.halo
@@ -721,7 +757,7 @@ def _run_segment(
         quant_out=quant_out,
     )
     out_dtype = jnp.int8 if quant_out else cdt
-    grid = (B,) + tuple(p // t for p, t in zip(padded, seg.tile))
+    grid = tuple(p // t for p, t in zip(padded, seg.tile)) + (B,)
     return pl.pallas_call(
         kernel,
         grid=grid,

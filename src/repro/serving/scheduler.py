@@ -154,6 +154,24 @@ class SchedulerConfig:
     the pipeline actually serves; ``True`` serves each request at its
     own volume geometry (the simulator's heterogeneous-fleet mode),
     pricing, grouping, and executing per request shape.
+
+    ``batched_dispatch`` turns a dispatch group into ONE batched kernel
+    launch instead of back-to-back member forwards (opt-in: the legacy
+    serialized semantics — and their golden traces — are the default).
+    When on: admission prices a request's working set INCLUDING one
+    weight-pytree copy, and group growth charges the weights once per
+    group rather than once per member (a single batched launch streams
+    them once — the per-member sum double-counts); on the modeled path
+    (``execute=False`` + a service model) the whole group serves in one
+    launch whose duration comes from the batch-N traffic model (weight
+    stream amortized, telemetry/traffic.py), every member stamped with
+    the launch's shared service interval while ``queue_wait_s +
+    service_s == finish - arrival`` still holds exactly per member.
+    With ``execute=True`` members still run serially through the
+    pipeline (conform/postprocess are per-volume); the group keeps the
+    shared compiled executable, and true batched execution is available
+    at the executor layer (``executors.apply`` with a leading batch
+    dim).
     """
 
     max_queue_depth: Optional[int] = 64
@@ -162,6 +180,7 @@ class SchedulerConfig:
     classes: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_CLASSES))
     allow_demotion: bool = True
     native_shapes: bool = False
+    batched_dispatch: bool = False
 
 
 @dataclasses.dataclass
@@ -450,17 +469,39 @@ class RequestScheduler:
         """Working-set bytes of one request in ``mode`` at ``precision`` —
         the telemetry/budget.py models charged against an unlimited
         budget (so the *pricing* never raises; the admission comparison
-        below is what enforces the configured limit)."""
+        below is what enforces the configured limit). Under
+        ``batched_dispatch`` the price additionally carries one weight-
+        pytree copy: a solo launch keeps the weights resident alongside
+        the activations, and pricing them here is what lets group growth
+        charge them ONCE per group (``_group_weight_bytes``) instead of
+        once per member."""
         from repro.kernels import quantize
 
         unl = MemoryBudget.unlimited()
         ab = quantize.act_bytes(precision)
         cfg = self.engine.cfg
         if mode == "subvolume":
-            return unl.charge_subvolume(cfg.cube, cfg.overlap, cfg.model, dtype_bytes=ab)
-        if mode == "streaming":
-            return unl.charge_streaming(shape, cfg.model, dtype_bytes=ab)
-        return unl.charge_inference(shape, cfg.model, dtype_bytes=ab)
+            need = unl.charge_subvolume(
+                cfg.cube, cfg.overlap, cfg.model, dtype_bytes=ab
+            )
+        elif mode == "streaming":
+            need = unl.charge_streaming(shape, cfg.model, dtype_bytes=ab)
+        else:
+            need = unl.charge_inference(shape, cfg.model, dtype_bytes=ab)
+        if self.cfg.batched_dispatch:
+            need += quantize.model_params_bytes(cfg.model, precision)
+        return need
+
+    def _group_weight_bytes(self, key) -> int:
+        """The weight-pytree bytes shared by every member of a batched
+        dispatch group (all members carry the group key's precision).
+        Zero under serialized dispatch, where ``_price`` never charged
+        weights in the first place."""
+        if not self.cfg.batched_dispatch or key is None:
+            return 0
+        from repro.kernels import quantize
+
+        return quantize.model_params_bytes(self.engine.cfg.model, key.precision)
 
     # ------------------------------------------------------- artifact cache
 
@@ -760,6 +801,12 @@ class RequestScheduler:
                 self._apply_demotion(seed, *form)
             members = [seed]
             total = seed.bytes_priced
+            # Batched dispatch prices the GROUP as one launch: every
+            # member's bytes_priced carries one weight-pytree copy (see
+            # _price), but a single batched launch streams the weights
+            # once, so growth charges each joiner its marginal bytes
+            # (bts - w_shared).  The seed's copy stays in ``total``.
+            w_shared = self._group_weight_bytes(seed.key)
             if seed.key is not None:
                 for req in [r for r in self.queue]:
                     if len(members) >= self.cfg.max_batch_requests:
@@ -786,14 +833,14 @@ class RequestScheduler:
                     if (
                         key == seed.key
                         and req.priority_class.name == seed.priority_class.name
-                        and (cap is None or total + bts <= cap)
+                        and (cap is None or total + (bts - w_shared) <= cap)
                     ):
                         self.queue.remove(req)
                         self._apply_breaker(req, now)
                         if via_demotion:
                             self._apply_demotion(req, key, bts)
                         members.append(req)
-                        total += bts
+                        total += bts - w_shared
             members.sort(key=lambda r: (r.arrival_s, r.id))
             self.stats.batches += 1
             self.stats.grouped_requests += len(members) - 1
@@ -928,6 +975,14 @@ class RequestScheduler:
         t = start
         if self.service_model is not None:
             t += self.service_model.batch_overhead_s
+        if (
+            self.cfg.batched_dispatch
+            and self.service_model is not None
+            and not self.execute
+            and len(batch.requests) > 1
+            and batch.requests[0].key is not None
+        ):
+            return self._run_batched_launch(batch, until, t)
         for idx, req in enumerate(batch.requests):
             if until is not None:
                 # preview the member's modeled duration WITHOUT serving
@@ -968,6 +1023,72 @@ class RequestScheduler:
             self._finish_attempt(req, rec, result, finish)
             t = finish
         return t, []
+
+    def _run_batched_launch(
+        self, batch: Batch, until: Optional[float], t: float
+    ) -> tuple[float, list]:
+        """Serve a dispatch group as ONE batched kernel launch (modeled
+        path, ``batched_dispatch`` only). The launch's service interval
+        comes from a single batch-N modeled record — the byte models
+        amortize the weight stream across the batch, so the launch is
+        strictly cheaper than N serialized dispatches whenever the
+        weight term is nonzero. Every member shares that interval:
+        ``queue_wait_s = t - arrival`` and ``service_s = launch_service``
+        so ``queue_wait_s + service_s == finish - arrival`` holds exactly
+        per member, the identity the SLO rollups rely on.
+
+        Fault injection stays per member (a transient flip fails one
+        member's record, not the group), but a straggler or stuck member
+        slows the WHOLE launch — one kernel finishes when its slowest
+        device does. The class service timeout (uniform across the
+        group: membership requires equal priority class) clips the
+        launch, failing the still-ok members with ``service_timeout``.
+        Horizon truncation is all-or-nothing: a single kernel either
+        fits before ``until`` or none of it runs, so the unserved tail
+        is the entire group."""
+        reqs = batch.requests
+        n = len(reqs)
+        attempts = [self._attempt_record(req, t) for req in reqs]
+        launch = self._modeled_record(reqs[0], batch=n)
+        service = self.service_model.service_s(launch)
+        factor, stuck = 1.0, False
+        for rec, decision in attempts:
+            if decision is not None and rec.status == "ok":
+                if decision.kind == "straggler":
+                    factor = max(factor, decision.slow_factor)
+                elif decision.kind == "stuck":
+                    stuck = True
+        service = math.inf if stuck else service * factor
+        timeout = (
+            None
+            if self.resilience is None
+            else self.resilience.timeout_for(reqs[0].priority_class.name)
+        )
+        timed_out = False
+        if timeout is not None and service > timeout:
+            service, timed_out = timeout, True
+        if math.isinf(service):
+            raise ResilienceConfigError(
+                f"stuck fault on class {reqs[0].priority_class.name!r} "
+                "with no service timeout configured"
+            )
+        finish = t + service
+        if until is not None and finish > until:
+            return t, list(reqs)
+        for req, (rec, decision) in zip(reqs, attempts):
+            self.engine.log.append(rec)
+            if timed_out and rec.status == "ok":
+                rec.status, rec.fail_type = "fail", SERVICE_TIMEOUT
+            rec.request_id = req.id
+            rec.arrival_s = req.arrival_s
+            rec.queue_wait_s = max(0.0, t - req.arrival_s)
+            rec.service_s = service
+            rec.batch_size = n
+            rec.priority_class = req.priority_class.name
+            rec.demoted = req.demoted
+            rec.attempt = req.attempt
+            self._finish_attempt(req, rec, None, finish)
+        return finish, []
 
     def _finish_attempt(self, req, rec, result, finish: float) -> None:
         """Fold one finished service attempt into breaker, retry, and
@@ -1248,11 +1369,14 @@ class RequestScheduler:
             self.engine.log.append(rec)
             return None, rec, decision
 
-    def _modeled_record(self, req: ServeRequest) -> TelemetryRecord:
+    def _modeled_record(self, req: ServeRequest, batch: int = 1) -> TelemetryRecord:
         """Synthesized telemetry for ``execute=False`` runs: status and
         modeled bytes come from the same pre-flight models the pipeline
         uses, with zero wall-clock compute — the large-sweep mode of the
-        load simulator."""
+        load simulator.  ``batch > 1`` models the request as an N-volume
+        batched launch: the byte models amortize the weight stream across
+        the batch, which is what makes a single batched dispatch cheaper
+        than N serialized ones."""
         from repro.core import executors
         from repro.kernels import quantize
 
@@ -1291,21 +1415,37 @@ class RequestScheduler:
                 ncubes = math.prod(-(-s // cfg.cube) for s in key.shape)
                 cube_shape = (cfg.cube + 2 * cfg.overlap,) * 3
                 per = executors.modeled_hbm_bytes(
-                    key.executor, cfg.model, cube_shape, precision=key.precision
+                    key.executor,
+                    cfg.model,
+                    cube_shape,
+                    batch=batch,
+                    precision=key.precision,
                 )
                 rec.hbm_bytes_modeled = None if per is None else ncubes * per
                 rec.collective_bytes_modeled = (
                     ncubes
                     * executors.modeled_collective_bytes(
-                        key.executor, cfg.model, cube_shape, precision=key.precision
+                        key.executor,
+                        cfg.model,
+                        cube_shape,
+                        batch=batch,
+                        precision=key.precision,
                     )
                 )
             else:
                 rec.hbm_bytes_modeled = executors.modeled_hbm_bytes(
-                    key.executor, cfg.model, key.shape, precision=key.precision
+                    key.executor,
+                    cfg.model,
+                    key.shape,
+                    batch=batch,
+                    precision=key.precision,
                 )
                 rec.collective_bytes_modeled = executors.modeled_collective_bytes(
-                    key.executor, cfg.model, key.shape, precision=key.precision
+                    key.executor,
+                    cfg.model,
+                    key.shape,
+                    batch=batch,
+                    precision=key.precision,
                 )
         except ValueError as e:
             from repro.core.spatial_shard import ShardGeometryError

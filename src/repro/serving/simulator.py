@@ -76,6 +76,13 @@ class ServiceModel:
     and a failed request costs ``fail_s`` (admission work, no forward).
     ``batch_overhead_s`` is charged once per dispatch group — the
     compile-cache/dispatch cost grouping amortizes.
+
+    Under ``SchedulerConfig.batched_dispatch`` the scheduler evaluates
+    ``service_s`` ONCE per dispatch group, on a single batch-N modeled
+    record whose byte models amortize the weight stream across the
+    batch (telemetry/traffic.py) — so the launch interval is
+    sub-additive in group size and the overload throughput cliff moves.
+    That amortization lives in the byte models; no formula here changes.
     """
 
     hbm_gbps: float = 819.0
@@ -564,7 +571,19 @@ def preset(name: str, seed: int = 0, horizon_s: Optional[float] = None) -> SimCo
                    short queue with a tight admission budget: the
                    scheduler must shed via typed rejection + demotion,
                    and conservation must still hold (zero lost requests).
+
+    Any preset also exists in a ``<name>_batched`` variant: the same
+    trace, same seed, same service model, with
+    ``SchedulerConfig.batched_dispatch=True`` — each dispatch group
+    serves as ONE batched launch whose weight stream amortizes across
+    the members. Comparing ``overload`` vs ``overload_batched`` on one
+    seed isolates the batching win (BENCH's ``batched`` section).
     """
+    if name.endswith("_batched"):
+        cfg = preset(name[: -len("_batched")], seed=seed, horizon_s=horizon_s)
+        cfg.name = name
+        cfg.scheduler = dataclasses.replace(cfg.scheduler, batched_dispatch=True)
+        return cfg
     if name == "steady":
         return SimConfig(
             name="steady",

@@ -19,6 +19,13 @@ Modeling conventions (counted per forward):
     window ((b+2d)/b)^3 x);
   * weights are streamed once per grid step (tiny for MeshNet, but
     counted — at 16^3 benchmark volumes they are not negligible);
+  * a batched forward (``batch=N``) re-reads and re-writes every data
+    tensor per element but streams each weight tensor ONCE per launch:
+    the batch loop is innermost in every backend's schedule (an XLA
+    fusion keeps weights resident across the leading dim; the megakernel
+    grid iterates batch inside the spatial tile), so
+    ``bytes(batch=N) < N * bytes(batch=1)`` whenever the weight term is
+    nonzero, with ``batch=1`` byte-identical to the pre-batching model;
   * scratch/VMEM traffic is free; only HBM crossings count.
 
 Precision (kernels/quantize.py): every model takes the storage policy
@@ -71,17 +78,18 @@ def meshnet_xla_bytes(
     its traffic floor (read once, write once) — generous to XLA."""
     ab, wb = _widths(precision)
     v = _vox(vol)
-    total = 0
+    data = 0
+    weights = 0
     cin = cfg.in_channels
     c = cfg.channels
     stages = 3 if cfg.use_batchnorm else 2  # conv, (bn,) relu
     for _ in cfg.dilations:
-        total += v * (cin + c) * ab  # conv read + write
-        total += (stages - 1) * 2 * v * c * ab  # bn/relu round-trips
-        total += 27 * cin * c * wb
+        data += v * (cin + c) * ab  # conv read + write
+        data += (stages - 1) * 2 * v * c * ab  # bn/relu round-trips
+        weights += 27 * cin * c * wb
         cin = c
-    total += v * (c + cfg.num_classes) * ab  # 1x1x1 head
-    return batch * total
+    data += v * (c + cfg.num_classes) * ab  # 1x1x1 head
+    return batch * data + weights
 
 
 def dilated_conv_layer_bytes(
@@ -113,18 +121,27 @@ def meshnet_fused_bytes(
     cfg, vol: Shape3, batch: int = 1, block: int = 16, precision: str = "fp32"
 ) -> int:
     """Per-layer fused Pallas path (ops.meshnet_apply): one
-    ``dilated_conv_layer_bytes`` term per layer, then the head einsum."""
+    ``dilated_conv_layer_bytes`` term per layer, then the head einsum.
+    The per-layer weight stream (``ntiles * 27*cin*c*wb`` inside the
+    layer term) is charged once per launch, not per batch element."""
     ab, wb = _widths(precision)
-    total = 0
+    data = 0
+    weights = 0
     cin = cfg.in_channels
     c = cfg.channels
     for d in cfg.dilations:
-        total += dilated_conv_layer_bytes(
-            vol, cin, c, d, block, ab, weight_dtype_bytes=wb
+        p = [_ceil_to(v, block) for v in vol]
+        wgt_l = math.prod(pp // block for pp in p) * 27 * cin * c * wb
+        data += (
+            dilated_conv_layer_bytes(
+                vol, cin, c, d, block, ab, weight_dtype_bytes=wb
+            )
+            - wgt_l
         )
+        weights += wgt_l
         cin = c
-    total += _vox(vol) * (c + cfg.num_classes) * ab  # head einsum
-    return batch * total
+    data += _vox(vol) * (c + cfg.num_classes) * ab  # head einsum
+    return batch * data + weights
 
 
 def meshnet_views_bytes(
@@ -134,20 +151,21 @@ def meshnet_views_bytes(
     step streams 27 full blocks regardless of dilation — the ~28x-off
     baseline the haloed load replaced (DESIGN.md §2)."""
     ab, wb = _widths(precision)
-    total = 0
+    data = 0
+    weights = 0
     cin = cfg.in_channels
     c = cfg.channels
     for _ in cfg.dilations:
         p = [_ceil_to(v, block) for v in vol]
         ntiles = math.prod(pp // block for pp in p)
-        total += _vox(vol) * cin * ab  # block-halo pad read
-        total += math.prod(pp + 2 * block for pp in p) * cin * ab
-        wgt = 27 * cin * c * wb
-        total += ntiles * (27 * block**3 * cin * ab + wgt)
-        total += math.prod(p) * c * ab
+        data += _vox(vol) * cin * ab  # block-halo pad read
+        data += math.prod(pp + 2 * block for pp in p) * cin * ab
+        data += ntiles * 27 * block**3 * cin * ab
+        weights += ntiles * 27 * cin * c * wb
+        data += math.prod(p) * c * ab
         cin = c
-    total += _vox(vol) * (c + cfg.num_classes) * ab
-    return batch * total
+    data += _vox(vol) * (c + cfg.num_classes) * ab
+    return batch * data + weights
 
 
 def meshnet_streaming_bytes(
@@ -161,23 +179,24 @@ def meshnet_streaming_bytes(
     v = _vox(vol)
     dmax = max(cfg.dilations)
     vp = math.prod(int(s) + 2 * dmax for s in vol)
-    total = 0
+    data = 0
+    weights = 0
     cin = cfg.in_channels
     c = cfg.channels
     for i, _ in enumerate(cfg.dilations):
         if i == 0:
             # first layer runs unstacked, as the plain XLA block
             stages = 3 if cfg.use_batchnorm else 2
-            total += v * (cin + c) * ab
-            total += (stages - 1) * 2 * v * c * ab
+            data += v * (cin + c) * ab
+            data += (stages - 1) * 2 * v * c * ab
         else:
-            total += v * c * ab + vp * c * ab  # pad carry
-            total += 27 * (vp + 2 * v) * c * ab  # taps + acc r/w
-            total += 2 * v * c * ab  # bn+relu epilogue
-        total += 27 * cin * c * wb
+            data += v * c * ab + vp * c * ab  # pad carry
+            data += 27 * (vp + 2 * v) * c * ab  # taps + acc r/w
+            data += 2 * v * c * ab  # bn+relu epilogue
+        weights += 27 * cin * c * wb
         cin = c
-    total += v * (c + cfg.num_classes) * ab
-    return batch * total
+    data += v * (c + cfg.num_classes) * ab
+    return batch * data + weights
 
 
 def meshnet_megakernel_bytes(
@@ -190,14 +209,17 @@ def meshnet_megakernel_bytes(
     """Depth-first tiled megakernel: the planner's own traffic model
     (kernels/megakernel.py) — haloed tile reads per segment, one logits
     write, zero intra-segment activation traffic. The plan is
-    re-optimized per precision (smaller working sets buy larger tiles),
-    and each tensor role is priced at its policy width, including the
-    int8 input and staging streams under "int8w"."""
+    re-optimized per precision (smaller working sets buy larger tiles)
+    AND per batch size (the DP scales data terms by N while charging the
+    weight stream once, so bigger batches favor halo-minimal tiles), and
+    each tensor role is priced at its policy width, including the int8
+    input and staging streams under "int8w"."""
     pln = megakernel.plan_for_config(
         cfg,
         tuple(int(s) for s in vol),
         vmem_budget=vmem_budget or megakernel.VMEM_BUDGET,
         precision=None if precision == "fp32" else precision,
+        batch=batch,
     )
     return pln.hbm_bytes(batch=batch)
 

@@ -180,7 +180,10 @@ class TestTrafficModel:
         pln = megakernel.plan_for_config(cfg, (256, 256, 256))
         assert pln.hbm_bytes() == traffic.meshnet_megakernel_bytes(cfg, (256, 256, 256))
 
-    def test_batch_scales_linearly(self):
+    def test_batch_is_subadditive(self):
+        # a batched launch streams each weight tensor ONCE (batch loop
+        # innermost), so bytes(N) < N*bytes(1): the data terms scale,
+        # the weight term does not. Strict — SMALL has nonzero weights.
         b1 = traffic.meshnet_megakernel_bytes(SMALL, (32, 32, 32), batch=1)
         b3 = traffic.meshnet_megakernel_bytes(SMALL, (32, 32, 32), batch=3)
-        assert b3 == 3 * b1
+        assert b1 < b3 < 3 * b1
